@@ -1,0 +1,88 @@
+"""Shared benchmark harness: builds the paper's experimental worlds.
+
+FAST mode (default, used by ``benchmarks.run``) shrinks horizons so the full
+suite completes on one CPU core; BENCH_FULL=1 restores paper-scale horizons
+(10 virtual days). Results are written as JSON under artifacts/bench/.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import PSAConfig
+from repro.data import (ClientDataset, dirichlet_partition, iid_partition,
+                        make_calibration_batch, make_classification,
+                        train_test_split)
+from repro.federated import SimConfig, run_algorithm
+from repro.models import model as model_lib
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+OUT_DIR = os.environ.get("BENCH_OUT", "artifacts/bench")
+
+HORIZON = 864_000.0 if FULL else 30_000.0
+EVAL_EVERY = 20_000.0 if FULL else 6_000.0
+NUM_CLIENTS = 50
+SAMPLES = 10_000
+
+_WORLD_CACHE: Dict = {}
+
+
+def world(alpha: float, model: str = "paper-synthetic-mlp", seed: int = 0):
+    key = (alpha, model, seed)
+    if key not in _WORLD_CACHE:
+        cfg = get_config(model)
+        if cfg.family == "cnn":
+            full = make_classification(SAMPLES, cfg.num_classes,
+                                       image_hw=cfg.input_hw, seed=seed,
+                                       class_sep=0.7)
+        else:
+            full = make_classification(SAMPLES, cfg.num_classes,
+                                       dim=cfg.input_hw[0], seed=seed,
+                                       class_sep=0.7)
+        train, test = train_test_split(full, 0.1)
+        if alpha <= 0:
+            parts = iid_partition(train, NUM_CLIENTS, seed)
+        else:
+            parts = dirichlet_partition(train, NUM_CLIENTS, alpha, seed)
+        clients = [ClientDataset(train.subset(ix)) for ix in parts]
+        calib = {
+            "gaussian": make_calibration_batch(train, 64, "gaussian"),
+            "real": make_calibration_batch(train, 64, "real"),
+        }
+        params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
+        _WORLD_CACHE[key] = (cfg, clients, test, calib, params)
+    return _WORLD_CACHE[key]
+
+
+def sim_config(**kw) -> SimConfig:
+    base = dict(num_clients=NUM_CLIENTS, horizon=HORIZON,
+                eval_every=EVAL_EVERY, seed=0)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def run_cell(alg: str, alpha: float, *, sim: Optional[SimConfig] = None,
+             psa: Optional[PSAConfig] = None, calib_source: str = "gaussian",
+             model: str = "paper-synthetic-mlp", seed: int = 0, **kw):
+    cfg, clients, test, calib, params = world(alpha, model, seed)
+    sim = sim or sim_config(seed=seed)
+    t0 = time.time()
+    res = run_algorithm(alg, cfg, params, clients, test, sim,
+                        psa_cfg=psa or PSAConfig(),
+                        calib_batch=calib[calib_source], **kw)
+    res.wall_s = time.time() - t0
+    return res
+
+
+def save(name: str, payload: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path

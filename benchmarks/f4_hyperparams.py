@@ -1,0 +1,48 @@
+"""Paper Fig. 4: hyperparameter sensitivity of FedPSA.
+
+Grid over (gamma, delta) and (L_s buffer, L_q queue). Claims validated:
+* performance degrades only when gamma AND delta are both very small
+  (temperature collapses to ~0 -> argmax-like aggregation too early),
+* L_s in 5..20 and L_q in 10..50 are flat; very large L_s slows updates.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core import PSAConfig
+from benchmarks import common
+
+GAMMA_DELTA_FULL = [(0.1, 0.05), (0.1, 0.5), (1, 0.5), (5, 0.5), (5, 2), (10, 1)]
+GAMMA_DELTA_FAST = [(0.1, 0.05), (5, 0.5), (10, 1)]
+LS_LQ_FULL = [(5, 10), (5, 50), (10, 50), (20, 50), (40, 50), (5, 200)]
+LS_LQ_FAST = [(5, 50), (20, 50), (5, 200)]
+
+
+def main(argv=None):
+    gd = GAMMA_DELTA_FULL if common.FULL else GAMMA_DELTA_FAST
+    sl = LS_LQ_FULL if common.FULL else LS_LQ_FAST
+    horizon = common.HORIZON if common.FULL else 60_000.0
+    rows = {}
+    for gamma, delta in gd:
+        psa = PSAConfig(gamma=gamma, delta=delta)
+        sim = common.sim_config(horizon=horizon, eval_every=horizon / 4)
+        res = common.run_cell("fedpsa", 0.1, sim=sim, psa=psa)
+        rows[f"gamma{gamma}_delta{delta}"] = res.final_accuracy
+        print(f"f4,gamma={gamma},delta={delta},{res.final_accuracy:.4f}")
+    for ls, lq in sl:
+        psa = PSAConfig(buffer_size=ls, queue_len=lq)
+        sim = common.sim_config(horizon=horizon, eval_every=horizon / 4)
+        res = common.run_cell("fedpsa", 0.1, sim=sim, psa=psa)
+        rows[f"Ls{ls}_Lq{lq}"] = res.final_accuracy
+        print(f"f4,Ls={ls},Lq={lq},{res.final_accuracy:.4f}")
+    common.save("f4_hyperparams", rows)
+    # the paper's warning: both gamma and delta very small hurts
+    small = rows.get("gamma0.1_delta0.05")
+    normal = rows.get("gamma5_delta0.5")
+    if small is not None and normal is not None:
+        print(f"f4,small_gamma_delta_penalty,{normal - small:+.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

@@ -1,0 +1,66 @@
+"""Paper Fig. 5: computation & communication overhead per method.
+
+Measures, for one client upload on the paper model:
+* client computation: local-update wall time, and FedPSA's extra
+  sensitivity+sketch time,
+* communication: bytes of the model update vs bytes of FedPSA's extra
+  payload (k floats) -> the compression ratio k/d (Eq. 13).
+The claim: FedPSA's additions are a negligible fraction of both budgets.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.common import tree as tu
+from repro.core import PSAConfig
+from repro.federated import make_sketch_fn
+from repro.federated.client import local_update
+from benchmarks import common
+
+
+def _time(fn, *a, reps=3, **kw):
+    fn(*a, **kw)  # warmup / compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*a, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def main(argv=None):
+    cfg, clients, test, calib, params = common.world(0.1)
+    d = tu.tree_size(params)
+    psa = PSAConfig()
+
+    t_local = _time(lambda: local_update(params, cfg, clients[0], epochs=5,
+                                         batch_size=64, lr=0.01, seed=0),
+                    reps=2)
+    sketch_fn = make_sketch_fn(cfg, calib["gaussian"], psa)
+    t_sketch = _time(sketch_fn, params, reps=5)
+
+    update_bytes = d * 4
+    sketch_bytes = psa.sketch_k * 4
+    rows = {
+        "model_params_d": d,
+        "local_update_s": t_local,
+        "sketch_s": t_sketch,
+        "sketch_over_local_pct": 100.0 * t_sketch / t_local,
+        "update_bytes": update_bytes,
+        "sketch_bytes": sketch_bytes,
+        "comm_overhead_pct": 100.0 * sketch_bytes / update_bytes,
+        "compression_ratio_k_over_d": psa.sketch_k / d,
+    }
+    for k, v in rows.items():
+        print(f"f5,{k},{v}")
+    common.save("f5_overhead", rows)
+    # the paper's claim: both overheads are marginal
+    print(f"f5,claim_comm_overhead_below_1pct,{rows['comm_overhead_pct'] < 1.0}")
+    return rows
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

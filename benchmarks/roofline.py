@@ -1,0 +1,117 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape) on the single-pod mesh:
+    compute term    = flops_per_device / PEAK_FLOPS          [s]
+    memory term     = bytes_per_device / HBM_BW              [s]
+    collective term = ici_bytes_per_device / ICI_BW          [s]
+
+Hardware constants (TPU v5e class, per the assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI (we charge the ring estimate against one
+link — a conservative single-axis view).
+
+MODEL_FLOPS uses the mode-appropriate analytic formula over ACTIVE params:
+train 6*N*T, prefill 2*N*T, decode 2*N*B; the ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat & redundancy overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+ART_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def model_flops(rec: dict) -> float:
+    n = rec["params_active"]
+    s, b = rec["seq_len"], rec["global_batch"]
+    mode = rec["mode"]
+    if mode == "train":
+        return 6.0 * n * s * b
+    if mode in ("prefill", "encode"):
+        return 2.0 * n * s * b
+    return 2.0 * n * b  # decode: one token per sequence
+
+
+def load(mesh: str = "pod"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    w = rec["world"]
+    t_c = rec["flops_per_device"] / PEAK_FLOPS
+    t_m = rec["bytes_per_device"] / HBM_BW
+    t_i = rec["collective_ici_bytes"] / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_i, "collective"))[1]
+    mf = model_flops(rec)
+    ratio = mf / max(rec["flops_per_device"] * w, 1.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mode": rec["mode"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_i,
+        "dominant": dom, "model_flops": mf,
+        "useful_ratio": ratio,
+        "roofline_frac": max(t_c, t_m, t_i) and t_c / max(t_c, t_m, t_i),
+    }
+
+
+IMPROVEMENT_NOTE = {
+    ("memory", "ssm"): "chunkwise-parallel recurrence keeps state in VMEM across a chunk instead of round-tripping HBM per token",
+    ("memory", "hybrid"): "chunkwise mamba scan + wider fused steps cut per-token state traffic",
+    ("memory", "dense"): "less remat (policy=dots) trades HBM re-reads for activation residency",
+    ("memory", "moe"): "larger expert blocks amortize dispatch buffer traffic",
+    ("memory", "audio"): "less remat (policy=dots) trades HBM re-reads for activation residency",
+    ("memory", "vlm"): "less remat + fused patch projector",
+    ("compute", "dense"): "already MXU-bound: raise per-chip utilization via larger q_chunk tiles",
+    ("compute", "moe"): "dropless grouped-matmul kernels remove capacity-padding flops",
+    ("collective", "dense"): "overlap all-gathers with layer compute (collective matmul); shard KV heads instead of replicating",
+    ("collective", "moe"): "hierarchical all-to-all over (pod, model) reduces cross-pod expert traffic",
+    ("collective", "ssm"): "batch-shard the recurrent state to remove per-step psums",
+    ("collective", "hybrid"): "batch-shard mamba state; window attention collectives are minor",
+}
+
+
+def note_for(row, family):
+    return IMPROVEMENT_NOTE.get((row["dominant"], family),
+                                "rebalance data/model axes for this shape")
+
+
+def main():
+    from repro.configs import get_config
+    recs = [r for r in load("pod") if r.get("status") == "ok"]
+    if not recs:
+        print("no dry-run artifacts found; run repro.launch.dryrun first",
+              file=sys.stderr)
+        return 1
+    print(f"{'arch':18s} {'shape':12s} {'mode':8s} "
+          f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+          f"{'dominant':>10s} {'useful':>7s}")
+    rows = []
+    for rec in recs:
+        row = roofline_row(rec)
+        rows.append(row)
+        print(f"{row['arch']:18s} {row['shape']:12s} {row['mode']:8s} "
+              f"{row['compute_s']:10.4f} {row['memory_s']:10.4f} "
+              f"{row['collective_s']:10.4f} {row['dominant']:>10s} "
+              f"{row['useful_ratio']:7.3f}")
+    # machine-readable dump for EXPERIMENTS.md
+    out = os.path.join(ART_DIR, "..", "roofline_pod.json")
+    for row in rows:
+        fam = get_config(row["arch"]).family
+        row["note"] = note_for(row, fam)
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n[roofline] {len(rows)} rows -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,53 @@
+"""Benchmark orchestrator — one entry per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast mode
+    BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run   # paper horizons
+
+Prints `table,key,value` CSV lines; JSON payloads land in artifacts/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (f2_motivation, f4_hyperparams, f5_overhead,
+                            f6_kappa_alignment, kernel_micro, roofline,
+                            t1_t2_accuracy, t3_aulc, t4_latency,
+                            t5_calibration, t6_ablation)
+    stages = [
+        ("roofline", roofline.main),
+        ("kernel_micro", kernel_micro.main),
+        ("f5_overhead", f5_overhead.main),
+        ("t1_t2_accuracy", t1_t2_accuracy.main),
+        ("t3_aulc", t3_aulc.main),
+        ("t6_ablation", t6_ablation.main),
+        ("t5_calibration", t5_calibration.main),
+        ("t4_latency", t4_latency.main),
+        ("f6_kappa_alignment", f6_kappa_alignment.main),
+        ("f2_motivation", f2_motivation.main),
+        ("f4_hyperparams", f4_hyperparams.main),
+    ]
+    t_all = time.time()
+    failures = []
+    for name, fn in stages:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the suite going; report at the end
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+        print(f"[{name}] {time.time() - t0:.0f}s")
+    print(f"\n[benchmarks] total {time.time() - t_all:.0f}s; "
+          f"{len(stages) - len(failures)}/{len(stages)} stages ok")
+    if failures:
+        for n, e in failures:
+            print(f"[benchmarks] FAILED {n}: {e}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

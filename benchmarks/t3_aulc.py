@@ -1,0 +1,38 @@
+"""Paper Table 3: AULC (area under the learning curve) per algorithm.
+
+Reads the learning curves produced by t1_t2_accuracy (same runs, as in the
+paper) and integrates them.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from benchmarks import common
+
+
+def main(argv=None):
+    path = os.path.join(common.OUT_DIR, "t3_curves.json")
+    if not os.path.exists(path):
+        print("t3_aulc: run t1_t2_accuracy first", file=sys.stderr)
+        return None
+    curves = json.load(open(path))
+    rows = {}
+    for name, c in curves.items():
+        t = np.asarray(c["times"])
+        a = np.asarray(c["accuracies"])
+        aulc = float(np.trapezoid(a, t) / 86_400.0)
+        rows[name] = aulc
+        print(f"t3,{name},{aulc:.4f}")
+    common.save("t3_aulc", rows)
+    # the paper's claim: FedPSA has the best AULC on the hardest setting
+    best = max((v, k) for k, v in rows.items() if k.endswith("@a0.1"))
+    print(f"t3,best_aulc_a0.1,{best[1]}")
+    return rows
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

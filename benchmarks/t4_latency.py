@@ -1,0 +1,42 @@
+"""Paper Table 4: robustness to system heterogeneity.
+
+FedBuff / CA2FL / FedPSA under uniform + long-tail latency at increasing
+scales (10-500, 20-1000, 50-2500). The claim: FedPSA degrades least as
+response times grow, because behavioral staleness does not dilate with
+wall-clock delay the way round-gap staleness does.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import common
+
+ALGS = ("fedbuff", "ca2fl", "fedpsa")
+SETTINGS_FULL = [("uniform", 10, 500), ("longtail", 10, 500),
+                 ("uniform", 20, 1000), ("longtail", 20, 1000),
+                 ("uniform", 50, 2500), ("longtail", 50, 2500)]
+SETTINGS_FAST = [("uniform", 10, 500), ("uniform", 50, 2500),
+                 ("longtail", 10, 500), ("longtail", 50, 2500)]
+
+
+def main(argv=None):
+    settings = SETTINGS_FULL if common.FULL else SETTINGS_FAST
+    rows = {}
+    for kind, lo, hi in settings:
+        for alg in ALGS:
+            sim = common.sim_config(latency_kind=kind, latency_lo=lo,
+                                    latency_hi=hi)
+            res = common.run_cell(alg, 0.1, sim=sim)
+            rows[f"{alg}@{kind}{lo}-{hi}"] = res.final_accuracy
+            print(f"t4,{alg},{kind}{lo}-{hi},{res.final_accuracy:.4f}")
+    common.save("t4_latency", rows)
+    # degradation uniform 10-500 -> 50-2500 per algorithm
+    for alg in ALGS:
+        a, b = rows.get(f"{alg}@uniform10-500"), rows.get(f"{alg}@uniform50-2500")
+        if a is not None and b is not None:
+            print(f"t4,degradation_{alg},{a - b:+.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

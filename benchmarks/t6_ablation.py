@@ -1,0 +1,45 @@
+"""Paper Table 6: component ablation — w/o T (thermometer), w/o S
+(sensitivity; raw-parameter sketch instead), w/o T&S, vs Full, under IID
+(alpha=1 ~ the paper's IID) and non-IID (alpha=0.1), at concurrency p.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.core import PSAConfig
+from benchmarks import common
+
+VARIANTS = {
+    "full": PSAConfig(),
+    "wo_T": PSAConfig(use_thermometer=False),
+    "wo_S": PSAConfig(use_sensitivity=False),
+    "wo_TS": PSAConfig(use_thermometer=False, use_sensitivity=False),
+}
+CONCURRENCY_FULL = (0.1, 0.2, 0.3)
+CONCURRENCY_FAST = (0.2,)
+
+
+def main(argv=None):
+    ps = CONCURRENCY_FULL if common.FULL else CONCURRENCY_FAST
+    # the thermometer only differentiates once updates shrink (late stage):
+    # the ablation needs a longer horizon than the accuracy tables
+    horizon = common.HORIZON if common.FULL else 70_000.0
+    rows = {}
+    for alpha, tag in ((1.0, "iid"), (0.1, "niid")):
+        for p in ps:
+            for name, psa in VARIANTS.items():
+                sim = common.sim_config(concurrency=p, horizon=horizon,
+                                        eval_every=horizon / 5)
+                res = common.run_cell("fedpsa", alpha, sim=sim, psa=psa)
+                rows[f"{name}@{tag}_p{p}"] = res.final_accuracy
+                print(f"t6,{name},{tag},p={p},{res.final_accuracy:.4f}")
+    common.save("t6_ablation", rows)
+    for p in ps:
+        full_ = rows[f"full@niid_p{p}"]
+        worst = min(rows[f"{v}@niid_p{p}"] for v in ("wo_T", "wo_S", "wo_TS"))
+        print(f"t6,full_minus_worst_ablation_niid_p{p},{full_ - worst:+.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

@@ -1,0 +1,147 @@
+"""End-to-end driver: federated pretraining of a transformer LM with FedPSA.
+
+    PYTHONPATH=src python examples/pretrain_lm.py                 # ~20M model
+    PYTHONPATH=src python examples/pretrain_lm.py --preset 100m   # ~100M model
+
+Exercises the SAME sharded train_step the production dry-run lowers (here on
+1 CPU device with empty rules), driven by the asynchronous FedPSA server:
+clients hold disjoint shards of a synthetic bigram corpus, train locally
+with AdamW, and upload deltas + sensitivity sketches; the server runs
+Algorithm 1. A few hundred aggregate steps of the default preset fit in CPU
+minutes; `--preset 100m` is the full-scale variant of the same driver.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.sharding import SINGLE_DEVICE_RULES as R
+from repro.common import tree as tu
+from repro.core import (PSAConfig, client_sketch, init_state, buffer_full,
+                        server_aggregate, server_receive)
+from repro.data import make_lm_corpus
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw, apply_updates, warmup_cosine
+from repro.checkpoint import save_pytree
+
+PRESETS = {
+    # ~2M params: CI smoke
+    "tiny": dict(num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+                 d_ff=512, vocab_size=1024),
+    # ~20M params: quick CPU demo
+    "20m": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=4,
+                d_ff=1024, vocab_size=2048),
+    # ~100M params: the assignment's "train a ~100M model" scale
+    "100m": dict(num_layers=8, d_model=768, num_heads=12, num_kv_heads=12,
+                 d_ff=3072, vocab_size=8192),
+}
+
+
+def make_cfg(preset: str) -> ModelConfig:
+    p = PRESETS[preset]
+    return ModelConfig(
+        name=f"pretrain-{preset}", family="dense",
+        block_pattern=("attn",), ffn_pattern=("dense",),
+        dtype="float32", param_dtype="float32", remat="none",
+        q_chunk=128, kv_chunk=128, **p)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="20m", choices=list(PRESETS))
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=40,
+                    help="global aggregations (x buffer = client updates)")
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.preset)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    total, _ = M.count_params(cfg)
+    print(f"[pretrain] {cfg.name}: {total/1e6:.1f}M params, "
+          f"{args.clients} clients, buffer 2")
+
+    corpus = make_lm_corpus(400_000, vocab=cfg.vocab_size, seed=0)
+    shards = np.array_split(corpus, args.clients)
+
+    opt = adamw(weight_decay=0.01)
+    schedule = warmup_cosine(args.lr, 20, args.rounds * 2)
+
+    def loss_fn(p, batch):
+        return M.loss_fn(p, batch, cfg, R)
+
+    @jax.jit
+    def local_step(p, opt_state, batch, lr):
+        l, g = jax.value_and_grad(loss_fn)(p, batch)
+        upd, opt_state = opt.update(g, opt_state, p, lr)
+        return apply_updates(p, upd), opt_state, l
+
+    def sample_batch(shard, rng):
+        starts = rng.randint(0, len(shard) - args.seq - 1, size=args.batch)
+        toks = np.stack([shard[s:s + args.seq + 1] for s in starts])
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+    psa_cfg = PSAConfig(buffer_size=2, queue_len=10, sketch_k=16)
+    psa = init_state(psa_cfg)
+    rng = np.random.RandomState(0)
+    calib = sample_batch(corpus, rng)
+
+    @jax.jit
+    def sketch_of(p):
+        return client_sketch(loss_fn, p, calib, psa_cfg)
+
+    psa.global_sketch = sketch_of(params)
+
+    t0 = time.time()
+    losses = []
+    step = 0
+    while psa_version(psa) < args.rounds:
+        cid = rng.randint(args.clients)
+        p_local = params
+        opt_state = opt.init(p_local)
+        for _ in range(args.local_steps):
+            lr = schedule(step)
+            p_local, opt_state, l = local_step(
+                p_local, opt_state, sample_batch(shards[cid], rng), lr)
+            step += 1
+        delta = tu.tree_sub(p_local, params)
+        server_receive(psa, delta, sketch_of(p_local))
+        losses.append(float(l))
+        if buffer_full(psa):
+            params, info = server_aggregate(psa, params)
+            psa.global_sketch = sketch_of(params)
+            v = psa_version(psa)
+            if v % 5 == 0 or v == args.rounds:
+                print(f"[pretrain] agg {v:4d} loss {np.mean(losses[-8:]):.3f} "
+                      f"temp={info['temp'] and float(info['temp']):} "
+                      f"({time.time()-t0:.0f}s)")
+
+    if args.ckpt:
+        save_pytree(params, args.ckpt, step=args.rounds)
+        print(f"[pretrain] checkpoint -> {args.ckpt}")
+    ppl0 = np.exp(losses[0])
+    ppl1 = np.exp(np.mean(losses[-8:]))
+    print(f"[pretrain] perplexity {ppl0:.1f} -> {ppl1:.1f} "
+          f"(bigram floor ~ branching=8)")
+
+
+_AGG_COUNT = {"n": 0}
+
+
+def psa_version(psa) -> int:
+    # server_aggregate clears the buffer; count completed aggregations
+    # by tracking thermometer pushes / buffer size
+    return int(psa.thermo.count) // psa.cfg.buffer_size
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: FedPSA vs FedBuff on a non-IID synthetic task in ~1 minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the public API end to end: build data -> partition -> pick the
+paper's hyperparameters -> run two algorithms -> compare.
+"""
+import jax
+
+from repro.configs import get_config
+from repro.core import PSAConfig
+from repro.data import (ClientDataset, dirichlet_partition,
+                        make_calibration_batch, make_classification,
+                        train_test_split)
+from repro.federated import SimConfig, run_algorithm
+from repro.models import model as M
+
+
+def main():
+    # 1. Task: synthetic 10-class Gaussian mixture, Dirichlet(0.1) split
+    full = make_classification(8_000, num_classes=10, dim=32, seed=0,
+                               class_sep=0.7)
+    train, test = train_test_split(full, test_frac=0.1)
+    parts = dirichlet_partition(train, num_clients=30, alpha=0.1, seed=0)
+    clients = [ClientDataset(train.subset(ix)) for ix in parts]
+
+    # 2. Shared calibration batch: pure Gaussian noise (paper Table 5 shows
+    #    this matches real data, with zero privacy cost)
+    calib = make_calibration_batch(train, batch_size=64, source="gaussian")
+
+    # 3. Model + the paper's hyperparameters
+    cfg = get_config("paper-synthetic-mlp")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sim = SimConfig(num_clients=30, concurrency=0.2, horizon=30_000,
+                    eval_every=6_000, seed=0)
+    psa = PSAConfig(buffer_size=5, queue_len=50, gamma=5.0, delta=0.5,
+                    sketch_k=16)
+
+    # 4. Run FedPSA and the FedBuff baseline
+    for alg in ("fedbuff", "fedpsa"):
+        res = run_algorithm(alg, cfg, params, clients, test, sim,
+                            psa_cfg=psa, calib_batch=calib)
+        print(f"{alg:8s} final accuracy {res.final_accuracy:.3f}  "
+              f"AULC {res.aulc:.3f}  global updates {res.versions}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.store import save_pytree, load_pytree, latest_step, save_train_state, load_train_state

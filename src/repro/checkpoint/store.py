@@ -1,0 +1,72 @@
+"""Checkpointing: pytrees -> .npz tensors + JSON treedef manifest.
+
+Layout: <dir>/step_<n>/arrays.npz + manifest.json. Restores to numpy (the
+caller re-shards / re-casts as needed). No framework dependencies.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        out[name] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(tree, directory: str, step: Optional[int] = None) -> str:
+    d = directory if step is None else os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    arrays = _flatten_with_names(tree)
+    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "treedef": str(treedef),
+        "names": sorted(arrays),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return d
+
+
+def load_pytree(directory: str, like: Any, step: Optional[int] = None):
+    """Restore into the structure of ``like`` (names must match)."""
+    d = directory if step is None else os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    names = _flatten_with_names(like)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    ordered_names = list(names)
+    assert len(ordered_names) == len(leaves)
+    restored = [data[n] for n in ordered_names]
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", f))]
+    return max(steps) if steps else None
+
+
+def save_train_state(params, opt_state, step: int, directory: str) -> str:
+    return save_pytree({"params": params, "opt": opt_state,
+                        "step": np.int64(step)}, directory, step)
+
+
+def load_train_state(directory: str, like_params, like_opt, step: Optional[int] = None):
+    step = step if step is not None else latest_step(directory)
+    tree = load_pytree(directory, {"params": like_params, "opt": like_opt,
+                                   "step": np.int64(0)}, step)
+    return tree["params"], tree["opt"], int(tree["step"])

@@ -1,0 +1,22 @@
+from repro.common.tree import (
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_axpy,
+    tree_zeros_like,
+    tree_dot,
+    tree_sq_norm,
+    tree_norm,
+    tree_size,
+    tree_weighted_sum,
+    tree_cast,
+    tree_all_finite,
+    flatten_to_vector,
+    unflatten_from_vector,
+)
+from repro.common.sharding import (
+    LogicalRules,
+    logical_to_pspec,
+    shard_pytree_spec,
+    with_logical_constraint,
+)

@@ -1,0 +1,111 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", "expert", ...). A `LogicalRules` table maps logical names to mesh
+axes; `None` means replicated. The same model code then runs on a 1-device
+CPU (empty rules), a 16x16 single pod, or a 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxis = Union[str, Sequence[str], None]
+
+
+class LogicalRules:
+    """Mapping logical axis name -> mesh axis (or tuple of mesh axes)."""
+
+    def __init__(self, rules: Mapping[str, MeshAxis]):
+        self.rules = dict(rules)
+
+    def mesh_axes(self, logical_axes: Sequence[Optional[str]]) -> P:
+        """Resolve logical names to a PartitionSpec. A mesh axis may appear
+        at most once per spec; when two logical axes of one tensor resolve to
+        the same mesh axis (e.g. mLSTM's ssm_inner x head_dim after the
+        head_dim TP fallback), the FIRST occurrence wins and later ones are
+        replicated — deterministic best-effort sharding."""
+        out = []
+        used: set = set()
+        for name in logical_axes:
+            if name is None:
+                out.append(None)
+                continue
+            ax = self.rules.get(name)
+            axes = tuple(ax) if isinstance(ax, (list, tuple)) else ((ax,) if ax else ())
+            kept = tuple(a for a in axes if a not in used)
+            if len(kept) != len(axes):
+                kept = ()  # partial overlap: replicate rather than half-shard
+            used.update(kept)
+            out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        return P(*out)
+
+    def __repr__(self):
+        return f"LogicalRules({self.rules})"
+
+
+# Default production rules. `batch` spans pod+data so a single client step is
+# synchronous data-parallel across the whole slice it owns; asynchrony lives in
+# the AFL runtime above the step.
+PRODUCTION_RULES = LogicalRules(
+    {
+        "batch": ("pod", "data"),
+        "tokens": ("pod", "data"),
+        "seq": None,
+        "embed": "data",          # FSDP: contraction/embed dim of weights
+        "embed_act": None,        # activations keep embed replicated
+        "seq_act": "model",       # sequence sharding of the residual stream
+                                  # (only constrained when cfg.seq_shard)
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "vocab_lookup": None,   # replicated: vocab-sharded gathers reshard badly
+        "expert": "model",
+        "expert_mlp": None,
+        "expert_capacity": None,
+        "qkv_inner": "model",
+        "conv_kernel": None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "layers": None,
+        "sketch": None,
+        "buffer": None,
+        "cache_seq": None,        # decode KV cache seq dim (rules_for upgrades)
+    }
+)
+
+# Variant for architectures whose expert count does not divide the `model`
+# axis (qwen2-moe: 60 experts). Experts are replicated; per-expert mlp dim is
+# tensor-parallel instead.
+EXPERT_TP_RULES = LogicalRules({**PRODUCTION_RULES.rules, "expert": None, "expert_mlp": "model"})
+
+SINGLE_DEVICE_RULES = LogicalRules({})
+
+
+def logical_to_pspec(rules: LogicalRules, logical_axes) -> P:
+    return rules.mesh_axes(logical_axes)
+
+
+def shard_pytree_spec(rules: LogicalRules, logical_tree):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda ax: rules.mesh_axes(ax),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def with_logical_constraint(x, rules: LogicalRules, logical_axes):
+    """sharding_constraint by logical names; no-op when rules are empty."""
+    if not rules.rules:
+        return x
+    spec = rules.mesh_axes(logical_axes)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

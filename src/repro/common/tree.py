@@ -1,0 +1,110 @@
+"""Pytree arithmetic used across the framework.
+
+Everything here is jit-friendly (pure jnp) and works on arbitrary nested
+dict/list/tuple pytrees of arrays — the framework's parameters, updates and
+optimizer states are all plain pytrees (no flax dependency).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y."""
+    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across the whole pytree (float32 accum)."""
+    leaves = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_sq_norm(a):
+    """Squared l2 norm of the flattened pytree (Eq. 16 of the paper)."""
+    leaves = jax.tree_util.tree_map(
+        lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a
+    )
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_size(a) -> int:
+    """Total number of scalar parameters (static python int)."""
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(a)))
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_i weights[i] * trees[i] for a list of pytrees.
+
+    `weights` may be a jnp vector (traced) of length len(trees).
+    """
+    def leaf_sum(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves], axis=0)
+        w = weights.astype(jnp.float32).reshape((-1,) + (1,) * (stacked.ndim - 1))
+        return jnp.sum(stacked * w, axis=0).astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(leaf_sum, *trees)
+
+
+def tree_cast(a, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a
+    )
+
+
+def tree_all_finite(a):
+    leaves = jax.tree_util.tree_map(lambda x: jnp.all(jnp.isfinite(x)), a)
+    return jax.tree_util.tree_reduce(jnp.logical_and, leaves, jnp.bool_(True))
+
+
+def flatten_to_vector(a):
+    """Concatenate all leaves to a single f32 vector. Returns (vec, unflatten)."""
+    leaves, treedef = jax.tree_util.tree_flatten(a)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    vec = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+
+    def unflatten(v):
+        out, off = [], 0
+        for shp, dt in zip(shapes, dtypes):
+            n = int(np.prod(shp)) if shp else 1
+            out.append(v[off : off + n].reshape(shp).astype(dt))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return vec, unflatten
+
+
+def unflatten_from_vector(vec, like):
+    """Reshape a flat vector into the structure of `like`."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        out.append(vec[off : off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)

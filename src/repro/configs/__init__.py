@@ -1,0 +1,45 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``--arch <id>``.
+
+One module per assigned architecture (source cited in each file), plus the
+paper's own CNN/MLP models. ``ARCHS`` maps id -> ModelConfig factory.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict
+
+from repro.models.config import ModelConfig
+
+_ARCH_MODULES = {
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen15_7b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_38b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a27b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    # paper models
+    "paper-mnist-cnn": "repro.configs.paper_models",
+    "paper-fmnist-linear": "repro.configs.paper_models",
+    "paper-cifar10-cnn": "repro.configs.paper_models",
+    "paper-cifar100-cnn": "repro.configs.paper_models",
+    "paper-synthetic-mlp": "repro.configs.paper_models",
+}
+
+ASSIGNED = [k for k in _ARCH_MODULES if not k.startswith("paper-")]
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch.endswith("-smoke"):
+        return get_config(arch[: -len("-smoke")]).reduced()
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.CONFIGS[arch] if hasattr(mod, "CONFIGS") else mod.CONFIG
+
+
+def list_archs():
+    return sorted(_ARCH_MODULES)

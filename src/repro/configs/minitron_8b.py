@@ -1,0 +1,22 @@
+"""minitron-8b [dense] — pruned nemotron [arXiv:2407.14679].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000. Nemotron uses
+squared-ReLU MLPs (no gate); the 256k vocabulary dominates the embedding
+footprint, so the unembedding/loss path is vocab-sharded + seq-chunked.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=256000,
+    block_pattern=("attn",),
+    ffn_pattern=("dense",),
+    ffn_act="relu2",
+    long_context_window=8192,
+)

@@ -1,0 +1,46 @@
+"""The paper's own evaluation models (FedPSA §6.1 Network Architectures).
+
+* MNIST: CNN — two 5x5 convs (32, 64 ch) each + ReLU + 2x2 maxpool, fc 512.
+* FMNIST: single linear layer 784 -> 10, bias init 0.
+* CIFAR-10/100: CNN — two 5x5 convs (64, 64) + fc 384 + fc 192.
+* synthetic-mlp: the small model the synthetic-data benchmarks train (the
+  offline stand-in for the image datasets; see repro/data).
+"""
+from repro.models.config import ModelConfig
+
+
+def _base(**kw):
+    defaults = dict(
+        num_layers=1, d_model=0, num_heads=0, num_kv_heads=0, d_ff=0,
+        vocab_size=0, head_dim=0, block_pattern=("attn",), ffn_pattern=("dense",),
+        dtype="float32", param_dtype="float32", remat="none",
+    )
+    defaults.update(kw)
+    return ModelConfig(**defaults)
+
+
+CONFIGS = {
+    "paper-mnist-cnn": _base(
+        name="paper-mnist-cnn", family="cnn",
+        cnn_channels=(32, 64), cnn_kernel=5, mlp_hidden=(512,),
+        input_hw=(28, 28, 1), num_classes=10,
+    ),
+    "paper-fmnist-linear": _base(
+        name="paper-fmnist-linear", family="mlp",
+        mlp_hidden=(), input_hw=(784, 0, 0), num_classes=10,
+    ),
+    "paper-cifar10-cnn": _base(
+        name="paper-cifar10-cnn", family="cnn",
+        cnn_channels=(64, 64), cnn_kernel=5, mlp_hidden=(384, 192),
+        input_hw=(32, 32, 3), num_classes=10,
+    ),
+    "paper-cifar100-cnn": _base(
+        name="paper-cifar100-cnn", family="cnn",
+        cnn_channels=(64, 64), cnn_kernel=5, mlp_hidden=(384, 192),
+        input_hw=(32, 32, 3), num_classes=100,
+    ),
+    "paper-synthetic-mlp": _base(
+        name="paper-synthetic-mlp", family="mlp",
+        mlp_hidden=(64, 32), input_hw=(32, 0, 0), num_classes=10,
+    ),
+}

@@ -1,0 +1,32 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L d_model=2048 16H (kv=16) per-expert d_ff=1408 vocab=151936, 60 experts
+top-4 with renormalized gates plus 4 always-on shared experts (shared path
+d_ff = 4*1408 = 5632). 60 experts do not divide the 16-way model axis, so
+this config uses expert-tensor-parallel sharding: experts replicated, the
+per-expert hidden dim (1408 = 16*88) sharded over ``model``.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    block_pattern=("attn",),
+    ffn_pattern=("moe",),
+    num_experts=60,
+    top_k=4,
+    num_shared_experts=4,
+    moe_d_ff=1408,
+    shared_d_ff=5632,
+    expert_tensor_parallel=True,
+    # §Perf opt: GShard group-local dispatch (16 groups = data shards) —
+    # collective term 230.7s -> 14.1s (16.4x)
+    dispatch_groups=16,
+    long_context_window=8192,
+)

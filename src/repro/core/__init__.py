@@ -1,0 +1,48 @@
+"""FedPSA core — the paper's primary contribution in JAX.
+
+Submodules: sensitivity (Eq. 3-8), sketch (Eq. 11-15), thermometer
+(Eq. 16-18), aggregation (Eq. 19-20 + baseline staleness fns), psa
+(Algorithm 1 glue).
+"""
+from repro.core.sensitivity import (
+    sensitivity,
+    sensitivity as compute_sensitivity,  # alias: the bare name shadows the submodule
+    sensitivity_from_parts,
+    fisher_diagonal,
+    first_order_sensitivity,
+)
+from repro.core.sketch import (
+    sketch_tree,
+    sketch_leaf,
+    cosine,
+    pcg_hash,
+    rademacher_row,
+    dense_projection,
+    DEFAULT_K,
+)
+from repro.core.thermometer import (
+    ThermometerState,
+    init_thermometer,
+    push,
+    temperature,
+    is_full,
+    current_mean,
+)
+from repro.core.aggregation import (
+    psa_weights,
+    uniform_weights,
+    aggregate_buffer,
+    staleness_constant,
+    staleness_polynomial,
+    staleness_hinge,
+)
+from repro.core.psa import (
+    PSAConfig,
+    PSAState,
+    init_state,
+    client_sketch,
+    server_receive,
+    server_aggregate,
+    refresh_global_sketch,
+    buffer_full,
+)

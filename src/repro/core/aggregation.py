@@ -1,0 +1,46 @@
+"""Buffer aggregation rules: FedPSA's temperature softmax (Eq. 19-20) and
+the time-based staleness weightings used by the asynchronous baselines."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import tree as tu
+
+
+def psa_weights(kappas: jnp.ndarray, temp: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 19: Weight_i = softmax(kappa_i / Temp) over the buffer."""
+    temp = jnp.maximum(temp, 1e-6)
+    return jax.nn.softmax(kappas.astype(jnp.float32) / temp)
+
+
+def uniform_weights(n: int) -> jnp.ndarray:
+    return jnp.full((n,), 1.0 / n, jnp.float32)
+
+
+def aggregate_buffer(global_params, updates: Sequence, weights: jnp.ndarray,
+                     server_lr: float = 1.0):
+    """Eq. 20: w_g <- w_g + sum_i Weight_i * dw_i."""
+    delta = tu.tree_weighted_sum(list(updates), weights * server_lr)
+    return tu.tree_add(global_params, delta)
+
+
+# ---------------------------------------------------------------------------
+# Time-based staleness functions (baselines; FedAsync Sec. 5 of [14])
+# ---------------------------------------------------------------------------
+
+def staleness_constant(tau, alpha: float = 0.6):
+    return jnp.full_like(jnp.asarray(tau, jnp.float32), alpha)
+
+
+def staleness_polynomial(tau, alpha: float = 0.6, a: float = 0.5):
+    """alpha * (1 + tau)^-a — the paper's traditional 1/sqrt(tau+1) curve."""
+    tau = jnp.asarray(tau, jnp.float32)
+    return alpha * jnp.power(1.0 + tau, -a)
+
+
+def staleness_hinge(tau, alpha: float = 0.6, a: float = 10.0, b: float = 4.0):
+    tau = jnp.asarray(tau, jnp.float32)
+    return jnp.where(tau <= b, alpha, alpha / (a * (tau - b) + 1.0))

@@ -1,0 +1,118 @@
+"""FedPSA — the paper's contribution as a composable module.
+
+Client side: ``client_sketch`` computes the Eq. 8 sensitivity on the shared
+calibration batch and compresses it to a k-vector (Eq. 11). Server side:
+``PSAState``/``server_receive``/``server_aggregate`` implement Algorithm 1 —
+buffer + kappa scoring + thermometer + temperature-softmax aggregation.
+
+The module is runtime-agnostic: the event-driven federated simulator uses it
+directly, and ``launch/dryrun.py`` lowers ``client_sketch`` / the aggregation
+under the production meshes (the sketch shards elementwise; kappa needs one
+k-float all-reduce).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import tree as tu
+from repro.core import aggregation, sketch, thermometer
+from repro.core.sensitivity import sensitivity as _compute_sensitivity
+
+
+@dataclass(frozen=True)
+class PSAConfig:
+    buffer_size: int = 5          # L_s (paper: 5)
+    queue_len: int = 50           # L_q (paper: 50)
+    gamma: float = 5.0            # temperature slope (paper: 5)
+    delta: float = 0.5            # temperature floor (paper: 0.5)
+    sketch_k: int = 16            # compressed dimension k (paper: 16)
+    sketch_seed: int = 42         # shared projection seed (stands in for R)
+    fisher_microbatches: int = 4
+    server_lr: float = 1.0
+    use_sensitivity: bool = True  # False => raw-parameter sketch (w/o S ablation)
+    use_thermometer: bool = True  # False => fixed Temp = delta+gamma (w/o T ablation)
+
+
+def client_sketch(loss_fn: Callable, params, calib_batch, cfg: PSAConfig) -> jnp.ndarray:
+    """What a client uploads alongside its update: the k-dim sensitivity
+    sketch evaluated on the shared calibration batch."""
+    if cfg.use_sensitivity:
+        s = _compute_sensitivity(loss_fn, params, calib_batch,
+                                 cfg.fisher_microbatches)
+    else:
+        s = params  # w/o S ablation: sketch the raw parameters
+    return sketch.sketch_tree(s, cfg.sketch_seed, cfg.sketch_k)
+
+
+class BufferEntry(NamedTuple):
+    update: object           # pytree dw_i
+    kappa: jnp.ndarray       # behavioral similarity vs the global sketch
+
+
+@dataclasses.dataclass
+class PSAState:
+    """Server-side mutable state (python-level; the math inside is jnp)."""
+    cfg: PSAConfig
+    thermo: thermometer.ThermometerState
+    buffer: List[BufferEntry] = dataclasses.field(default_factory=list)
+    global_sketch: Optional[jnp.ndarray] = None
+
+
+def init_state(cfg: PSAConfig) -> PSAState:
+    return PSAState(cfg=cfg, thermo=thermometer.init_thermometer(cfg.queue_len))
+
+
+def refresh_global_sketch(state: PSAState, loss_fn, global_params, calib_batch):
+    """Recompute the server model's sensitivity sketch (after each update)."""
+    state.global_sketch = client_sketch(loss_fn, global_params, calib_batch, state.cfg)
+
+
+def server_receive(state: PSAState, update, client_sketch_vec: jnp.ndarray):
+    """Algorithm 1 lines 14-16: push (dw, kappa) into the buffer and the
+    update magnitude into the thermometer queue."""
+    kappa = sketch.cosine(client_sketch_vec, state.global_sketch)
+    state.buffer.append(BufferEntry(update, kappa))
+    m = tu.tree_sq_norm(update)  # Eq. 16
+    state.thermo = thermometer.push(state.thermo, m)
+
+
+def buffer_full(state: PSAState) -> bool:
+    return len(state.buffer) >= state.cfg.buffer_size
+
+
+def server_aggregate(state: PSAState, global_params):
+    """Algorithm 1 lines 17-31: weight the buffered updates and apply them.
+
+    Uniform averaging until the thermometer queue first fills; afterwards the
+    temperature-softmax of the kappa scores (Eq. 18-20).
+    """
+    cfg = state.cfg
+    n = len(state.buffer)
+    assert n > 0, "aggregate called with empty buffer"
+    kappas = jnp.stack([e.kappa for e in state.buffer])
+    if cfg.use_thermometer:
+        queue_ready = bool(thermometer.is_full(state.thermo))
+        if queue_ready:
+            temp = thermometer.temperature(state.thermo, cfg.gamma, cfg.delta)
+            weights = aggregation.psa_weights(kappas, temp)
+        else:
+            weights = aggregation.uniform_weights(n)
+            temp = None
+    else:  # w/o T ablation: fixed early-phase temperature
+        temp = jnp.float32(cfg.gamma + cfg.delta)
+        weights = aggregation.psa_weights(kappas, temp)
+    new_global = aggregation.aggregate_buffer(
+        global_params, [e.update for e in state.buffer], weights, cfg.server_lr)
+    state.buffer.clear()
+    info = {
+        "weights": weights,
+        "kappas": kappas,
+        "temp": temp,
+        "m_cur": thermometer.current_mean(state.thermo),
+    }
+    return new_global, info

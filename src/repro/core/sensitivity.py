@@ -1,0 +1,72 @@
+"""Parameter sensitivity (paper Eq. 3-8).
+
+Sensitivity of parameter i is the loss change when zeroing it, approximated
+by a 2nd-order Taylor expansion with the empirical-Fisher diagonal standing
+in for the Hessian diagonal:
+
+    s_i = | g_i * theta_i  -  1/2 * F_ii * theta_i^2 |          (Eq. 8)
+    F_ii = mean_k ( (d loss_k / d theta_i)^2 )                  (Eq. 6)
+
+Both the gradient and the Fisher diagonal are evaluated on the *shared
+calibration batch* D_b (which may be pure Gaussian noise — paper Table 5),
+so sensitivities are comparable across clients. The Fisher mean runs over
+microbatches of D_b via lax.scan (memory-flat, jit-friendly).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import tree as tu
+
+
+def _split_microbatches(batch: dict, num_micro: int) -> dict:
+    """Reshape every leaf (B, ...) -> (m, B//m, ...)."""
+    def rs(x):
+        B = x.shape[0]
+        assert B % num_micro == 0, f"batch {B} % microbatches {num_micro} != 0"
+        return x.reshape((num_micro, B // num_micro) + x.shape[1:])
+    return jax.tree_util.tree_map(rs, batch)
+
+
+def fisher_diagonal(loss_fn: Callable, params, calib_batch: dict,
+                    num_micro: int = 4):
+    """Empirical Fisher diagonal: mean over microbatches of squared grads."""
+    micro = _split_microbatches(calib_batch, num_micro)
+
+    def body(acc, mb):
+        g = jax.grad(loss_fn)(params, mb)
+        acc = jax.tree_util.tree_map(
+            lambda a, gi: a + jnp.square(gi.astype(jnp.float32)), acc, g)
+        return acc, None
+
+    acc0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    acc, _ = jax.lax.scan(body, acc0, micro)
+    return jax.tree_util.tree_map(lambda a: a / num_micro, acc)
+
+
+def sensitivity(loss_fn: Callable, params, calib_batch: dict,
+                num_micro: int = 4):
+    """Eq. 8 sensitivity pytree. ``loss_fn(params, batch) -> scalar``."""
+    g = jax.grad(loss_fn)(params, calib_batch)
+    fisher = fisher_diagonal(loss_fn, params, calib_batch, num_micro)
+    return sensitivity_from_parts(params, g, fisher)
+
+
+def sensitivity_from_parts(params, grads, fisher):
+    """|g*theta - 0.5*F*theta^2| elementwise over the pytree (f32)."""
+    def leaf(p, g, f):
+        p32 = p.astype(jnp.float32)
+        g32 = g.astype(jnp.float32)
+        return jnp.abs(g32 * p32 - 0.5 * f * jnp.square(p32))
+    return jax.tree_util.tree_map(leaf, params, grads, fisher)
+
+
+def first_order_sensitivity(params, grads):
+    """|g * theta| — the SNIP-style first-order variant (ablation)."""
+    return jax.tree_util.tree_map(
+        lambda p, g: jnp.abs(g.astype(jnp.float32) * p.astype(jnp.float32)),
+        params, grads)

@@ -1,0 +1,106 @@
+"""Sensitivity sketching via a *never-materialized* random projection.
+
+Paper Eq. 11-15: the server broadcasts a fixed R in R^{k x d} and clients
+send sketches R @ s. At assigned-architecture scale (llama3-405b: d ~ 4e11)
+a dense R would be ~100 TB, so R is never formed. Instead every entry is a
+Rademacher sign generated on the fly from a counter-based integer hash:
+
+    R[r, j] = sign(pcg(seed_leaf ^ pcg(j * K + r))) / sqrt(k)
+
+Rademacher projections satisfy the JL lemma (Achlioptas 2003), so sketch-
+space cosine approximates full-space cosine exactly as in the paper. The
+hash is pure uint32 arithmetic — identical in jnp (this module), in the
+Pallas kernel (repro/kernels/sens_sketch.py), and in its ref oracle, so all
+paths produce bit-identical sketches.
+
+Sharding: the hash/sign/multiply are elementwise over the (sharded) leaf and
+the contraction is a full reduce-sum — under GSPMD each device sketches its
+local shard and one all-reduce of k floats combines partials. The server
+never sees a full-d vector (DESIGN.md §3).
+
+uint32 wraparound note: for leaves with >2^32/K elements the linear index
+wraps; the resulting rare sign-collisions are harmless for JL (they touch a
+2^-28 fraction of entries) and are deterministic across all implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_K = 16  # paper: compressed dimension k = 16
+
+
+def pcg_hash(x: jnp.ndarray) -> jnp.ndarray:
+    """PCG-XSH-RR style 32-bit mix (uint32 in, uint32 out)."""
+    x = x.astype(jnp.uint32)
+    state = x * jnp.uint32(747796405) + jnp.uint32(2891336453)
+    word = ((state >> ((state >> jnp.uint32(28)) + jnp.uint32(4))) ^ state)
+    word = word * jnp.uint32(277803737)
+    return (word >> jnp.uint32(22)) ^ word
+
+
+def leaf_seed(seed: int, leaf_index: int) -> jnp.ndarray:
+    return pcg_hash(jnp.uint32(seed) ^ (jnp.uint32(leaf_index) * jnp.uint32(0x9E3779B9)))
+
+
+def rademacher_row(seed_u32, lin_idx: jnp.ndarray, r: int, k: int) -> jnp.ndarray:
+    """±1 f32 signs for projection row r at flat positions ``lin_idx``."""
+    h = pcg_hash(seed_u32 ^ pcg_hash(lin_idx * jnp.uint32(k) + jnp.uint32(r)))
+    return jnp.where((h >> jnp.uint32(31)) == 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def _leaf_linear_index(shape) -> jnp.ndarray:
+    """Flat linear index as a tensor of ``shape`` built from per-dim iotas
+    (elementwise, so it partitions under GSPMD without relayout)."""
+    idx = jnp.zeros(shape, jnp.uint32)
+    stride = 1
+    for d in range(len(shape) - 1, -1, -1):
+        io = jax.lax.broadcasted_iota(jnp.uint32, shape, d)
+        idx = idx + io * jnp.uint32(stride % (1 << 32))
+        stride *= shape[d]
+    return idx
+
+
+def sketch_leaf(leaf: jnp.ndarray, seed_u32, k: int = DEFAULT_K) -> jnp.ndarray:
+    """(k,) partial sketch of one leaf: row-at-a-time contraction, each row an
+    elementwise hash+multiply+reduce (one tiny all-reduce under GSPMD)."""
+    x = leaf.astype(jnp.float32)
+    lin = _leaf_linear_index(leaf.shape)
+    rows = []
+    for r in range(k):
+        sign = rademacher_row(seed_u32, lin, r, k)
+        rows.append(jnp.sum(x * sign))
+    return jnp.stack(rows) / np.sqrt(k)
+
+
+def sketch_tree(tree, seed: int = 0, k: int = DEFAULT_K) -> jnp.ndarray:
+    """Full-model sensitivity sketch: sum of per-leaf partial sketches.
+
+    Equivalent to R @ concat(leaves) for the blockwise-defined R.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = jnp.zeros((k,), jnp.float32)
+    for i, leaf in enumerate(leaves):
+        total = total + sketch_leaf(leaf, leaf_seed(seed, i), k)
+    return total
+
+
+def cosine(a: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """Sketch-space cosine similarity (paper Eq. 12), in [-1, 1]."""
+    num = jnp.sum(a * b)
+    den = jnp.sqrt(jnp.sum(jnp.square(a))) * jnp.sqrt(jnp.sum(jnp.square(b)))
+    return num / jnp.maximum(den, eps)
+
+
+def dense_projection(seed: int, leaf_shapes, k: int = DEFAULT_K) -> np.ndarray:
+    """Materialize R (k x d) for SMALL models — test oracle / paper-faithful
+    reference. Column order matches ``sketch_tree`` leaf order."""
+    cols = []
+    for i, shape in enumerate(leaf_shapes):
+        n = int(np.prod(shape)) if shape else 1
+        seed_u = leaf_seed(seed, i)
+        lin = jnp.arange(n, dtype=jnp.uint32)
+        block = jnp.stack([rademacher_row(seed_u, lin, r, k) for r in range(k)])
+        cols.append(np.asarray(block))
+    return np.concatenate(cols, axis=1) / np.sqrt(k)

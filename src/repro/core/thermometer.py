@@ -1,0 +1,69 @@
+"""Training thermometer (paper Eq. 16-18).
+
+A fixed-size queue Q of recent update magnitudes m_i = ||dw_i||_2^2. The
+temperature is
+
+    Temp = (M_cur / M_0) * gamma + delta
+
+where M_cur is the current queue mean and M_0 the mean when the queue first
+filled. Until the queue is full the weighting scheme is uniform averaging
+(Algorithm 1 lines 17-18). Implemented as an immutable NamedTuple of jnp
+scalars/arrays so it can live inside jit'd server steps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class ThermometerState(NamedTuple):
+    queue: jnp.ndarray   # (L_q,) f32 ring buffer
+    count: jnp.ndarray   # total number of pushes (int32)
+    m0: jnp.ndarray      # queue mean when first full (f32, 0 until then)
+
+    @property
+    def capacity(self) -> int:
+        return self.queue.shape[0]
+
+
+def init_thermometer(queue_len: int = 50) -> ThermometerState:
+    return ThermometerState(
+        queue=jnp.zeros((queue_len,), jnp.float32),
+        count=jnp.int32(0),
+        m0=jnp.float32(0.0),
+    )
+
+
+def push(state: ThermometerState, m: jnp.ndarray) -> ThermometerState:
+    """Push one magnitude; oldest entry dropped once full (ring buffer).
+    Captures M_0 on the push that fills the queue for the first time."""
+    L = state.capacity
+    slot = jnp.mod(state.count, L)
+    queue = state.queue.at[slot].set(jnp.float32(m))
+    count = state.count + 1
+    just_full = count == L
+    m_cur = jnp.sum(queue) / L
+    m0 = jnp.where(just_full, m_cur, state.m0)
+    return ThermometerState(queue=queue, count=count, m0=m0)
+
+
+def is_full(state: ThermometerState) -> jnp.ndarray:
+    return state.count >= state.capacity
+
+
+def current_mean(state: ThermometerState) -> jnp.ndarray:
+    """M_cur: mean over valid entries (whole ring once full)."""
+    L = state.capacity
+    n = jnp.minimum(state.count, L)
+    return jnp.sum(state.queue) / jnp.maximum(n, 1).astype(jnp.float32)
+
+
+def temperature(state: ThermometerState, gamma: float = 5.0,
+                delta: float = 0.5) -> jnp.ndarray:
+    """Eq. 18. Only meaningful once the queue is full (caller falls back to
+    uniform weighting before that — Algorithm 1)."""
+    m_cur = current_mean(state)
+    ratio = m_cur / jnp.maximum(state.m0, 1e-30)
+    return ratio * gamma + delta

@@ -1,0 +1,9 @@
+from repro.data.synthetic import (
+    SyntheticClassification,
+    make_classification,
+    make_lm_corpus,
+    train_test_split,
+)
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.calibration import make_calibration_batch
+from repro.data.loader import ClientDataset, batch_iterator

@@ -1,0 +1,41 @@
+"""Minimal client-side data loading: shuffled epoch batch iterators."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.synthetic import SyntheticClassification
+
+
+@dataclass
+class ClientDataset:
+    data: SyntheticClassification
+
+    def __len__(self):
+        return len(self.data)
+
+    def epochs(self, num_epochs: int, batch_size: int, seed: int) -> Iterator[dict]:
+        rng = np.random.RandomState(seed)
+        n = len(self.data)
+        bs = min(batch_size, n)
+        for _ in range(num_epochs):
+            order = rng.permutation(n)
+            for start in range(0, n - bs + 1, bs):
+                idx = order[start:start + bs]
+                yield {"x": self.data.x[idx].astype(np.float32),
+                       "y": self.data.y[idx].astype(np.int32)}
+
+
+def batch_iterator(ds: SyntheticClassification, batch_size: int,
+                   seed: int = 0) -> Iterator[dict]:
+    """Endless shuffled batches (evaluation/training streams)."""
+    rng = np.random.RandomState(seed)
+    n = len(ds)
+    while True:
+        order = rng.permutation(n)
+        for start in range(0, n - batch_size + 1, batch_size):
+            idx = order[start:start + batch_size]
+            yield {"x": ds.x[idx].astype(np.float32),
+                   "y": ds.y[idx].astype(np.int32)}

@@ -1,0 +1,12 @@
+from repro.federated.simulator import (
+    SimConfig,
+    SimResult,
+    run_algorithm,
+    run_async,
+    run_fedavg,
+    make_sketch_fn,
+    ALGORITHMS,
+)
+from repro.federated.servers import make_server
+from repro.federated.client import local_update
+from repro.federated.latency import make_latency_sampler, per_client_latency

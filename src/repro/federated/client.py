@@ -1,0 +1,70 @@
+"""Client-side local training (paper protocol: E epochs of SGD, batch 64).
+
+The per-batch step is jit'd once per (model config, variant) and cached.
+``local_update`` returns the parameter delta dw = w_after - w_before plus
+optional extras (FedPSA sensitivity sketch, FedPAC alignment stats).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import tree as tu
+from repro.data.loader import ClientDataset
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+_STEP_CACHE = {}
+
+
+def _loss_for(cfg: ModelConfig, prox: float, align: float):
+    def loss(params, batch, anchor):
+        base = model_lib.loss_fn(params, batch, cfg, _RULES)
+        if prox > 0.0:  # FedProx-style proximal pull toward the anchor
+            base = base + 0.5 * prox * tu.tree_sq_norm(tu.tree_sub(params, anchor))
+        if align > 0.0:  # FedPAC-lite: align the classifier head with global
+            head_p = _head(params)
+            head_a = _head(anchor)
+            base = base + 0.5 * align * tu.tree_sq_norm(tu.tree_sub(head_p, head_a))
+        return base
+    return loss
+
+
+def _head(params):
+    """Classifier head leaves (last fc layer) of the paper models."""
+    fc_keys = sorted(k for k in params if k.startswith("fc"))
+    return params[fc_keys[-1]] if fc_keys else params
+
+
+from repro.common.sharding import SINGLE_DEVICE_RULES as _RULES
+
+
+def _get_step(cfg: ModelConfig, prox: float, align: float):
+    key = (cfg.name, prox, align)
+    if key not in _STEP_CACHE:
+        loss = _loss_for(cfg, prox, align)
+
+        @jax.jit
+        def step(params, batch, anchor, lr):
+            g = jax.grad(loss)(params, batch, anchor)
+            return jax.tree_util.tree_map(
+                lambda p, gi: p - lr * gi.astype(p.dtype), params, g)
+
+        _STEP_CACHE[key] = step
+    return _STEP_CACHE[key]
+
+
+def local_update(global_params, cfg: ModelConfig, dataset: ClientDataset, *,
+                 epochs: int = 5, batch_size: int = 64, lr: float = 0.01,
+                 seed: int = 0, prox: float = 0.0, align: float = 0.0):
+    """Run E local epochs of SGD from ``global_params``; returns (delta, w_i)."""
+    step = _get_step(cfg, prox, align)
+    params = global_params
+    lr = jnp.float32(lr)
+    for batch in dataset.epochs(epochs, batch_size, seed):
+        params = step(params, batch, global_params, lr)
+    delta = tu.tree_sub(params, global_params)
+    return delta, params

@@ -1,0 +1,39 @@
+"""Client response-time distributions (paper §6.2 system heterogeneity).
+
+Uniform(lo, hi) and a long-tail distribution over the same support (most
+clients near ``lo``, a heavy tail toward ``hi`` — the paper notes long-tail
+response times cluster around the minimum).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_latency_sampler(kind: str, lo: float, hi: float, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    if kind == "uniform":
+        def sample():
+            return float(rng.uniform(lo, hi))
+    elif kind == "longtail":
+        # Pareto-shaped: mass near lo, tail to hi
+        def sample():
+            x = (np.power(1.0 - rng.rand(), -1.0 / 1.5) - 1.0)  # pareto(1.5)
+            return float(np.clip(lo * (1.0 + x), lo, hi))
+    else:
+        raise ValueError(f"unknown latency kind {kind!r}")
+    return sample
+
+
+def per_client_latency(kind: str, lo: float, hi: float, num_clients: int,
+                       seed: int = 0):
+    """Fixed mean latency per client + per-dispatch jitter, as in FLGO:
+    heterogeneity lives across clients, not only across dispatches."""
+    rng = np.random.RandomState(seed)
+    sampler = make_latency_sampler(kind, lo, hi, seed)
+    means = np.array([sampler() for _ in range(num_clients)])
+
+    def sample(client_id: int) -> float:
+        jitter = rng.uniform(0.9, 1.1)
+        return float(np.clip(means[client_id] * jitter, lo, hi))
+
+    return sample, means

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for FedPSA's compute hot-spots.
+
+* sens_sketch      — fused Eq. 8 sensitivity + on-the-fly Rademacher sketch
+* buffer_agg       — Eq. 20 buffered weighted-sum apply
+* flash_attention  — online-softmax attention forward (VMEM-resident state;
+                     the §Perf answer to HBM-resident probability blocks)
+
+Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
+(ref.py); on CPU they run in interpret mode.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.sens_sketch import sens_sketch_pallas
+from repro.kernels.buffer_agg import buffer_agg_pallas
+from repro.kernels.flash_attention import flash_attention

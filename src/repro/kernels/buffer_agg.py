@@ -1,0 +1,51 @@
+"""Buffered weighted-sum Pallas kernel (FedPSA Eq. 20 apply step).
+
+Aggregates the L_s buffered client updates into the global model in one
+streaming pass: for each parameter block, read the (L, block) update slab
+and the global block, emit global + sum_l w_l * update_l. One HBM read per
+update element, one read+write of the global — no (L x d) temporary.
+
+Block layout: updates are stored stacked (L, d); the grid walks d in
+(8*128*8)-lane blocks, weights stay resident in VMEM ((L,) is tiny).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8 * 128 * 8
+
+
+def _buffer_agg_kernel(w_ref, g_ref, u_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)           # (L,)
+    u = u_ref[...].astype(jnp.float32)           # (L, block)
+    g = g_ref[...].astype(jnp.float32)           # (block,)
+    out_ref[...] = g + jnp.einsum("l,lb->b", w, u)
+
+
+def buffer_agg_pallas(weights: jnp.ndarray, global_vec: jnp.ndarray,
+                      updates: jnp.ndarray, *, block: int = DEFAULT_BLOCK,
+                      interpret: bool = True) -> jnp.ndarray:
+    """weights (L,), global_vec (d,), updates (L, d) -> (d,) f32."""
+    L, d = updates.shape
+    n = -(-d // block)
+    dp = n * block
+    gv = jnp.pad(global_vec.astype(jnp.float32), [(0, dp - d)])
+    up = jnp.pad(updates.astype(jnp.float32), [(0, 0), (0, dp - d)])
+
+    out = pl.pallas_call(
+        _buffer_agg_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((L,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((L, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), gv, up)
+    return out[:d]

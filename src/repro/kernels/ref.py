@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-compatible hashing)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.core.sensitivity import sensitivity_from_parts
+
+
+def sens_sketch_ref(theta, g, f, *, k: int = 16, seed: int = 0) -> jnp.ndarray:
+    """Sensitivity (Eq. 8) of flat vectors followed by the hashed Rademacher
+    projection — identical math to repro.core.sketch on a single flat leaf."""
+    s = jnp.abs(g.astype(jnp.float32) * theta.astype(jnp.float32)
+                - 0.5 * f.astype(jnp.float32) * jnp.square(theta.astype(jnp.float32)))
+    lin = jnp.arange(s.shape[0], dtype=jnp.uint32)
+    rows = [jnp.sum(s * sk.rademacher_row(jnp.uint32(seed), lin, r, k))
+            for r in range(k)]
+    return jnp.stack(rows) / np.sqrt(k)
+
+
+def buffer_agg_ref(weights, global_vec, updates) -> jnp.ndarray:
+    """global + sum_l w_l * updates_l in f32."""
+    return global_vec.astype(jnp.float32) + jnp.einsum(
+        "l,ld->d", weights.astype(jnp.float32), updates.astype(jnp.float32))

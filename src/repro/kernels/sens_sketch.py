@@ -1,0 +1,93 @@
+"""Fused sensitivity + sketch Pallas TPU kernel.
+
+The hot loop of FedPSA's client upload path: for every parameter block,
+compute the Eq. 8 sensitivity s = |g*theta - 0.5*F*theta^2| and immediately
+contract it against the on-the-fly Rademacher projection rows, accumulating
+the k-vector sketch in VMEM. HBM traffic is exactly one streaming read of
+(theta, g, F) per block — the d-sized sensitivity vector is NEVER written to
+HBM, and the (k x d) projection matrix is never materialized (it is hashed
+from the block's linear indices inside the kernel).
+
+TPU adaptation notes (DESIGN.md §3): the paper's GPU implementation builds s
+in device memory and multiplies by a broadcast dense R. On TPU we fuse both
+into one VMEM-resident pass; the per-row sign generation is VPU integer work
+that overlaps the float multiply-accumulate. Block size is a multiple of
+(8, 128) lanes.
+
+Grid: one program per parameter block; the (k,) output block is revisited by
+every program (index_map -> 0) and accumulated sequentially, the standard
+Pallas reduction pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8 * 128 * 8  # 8192 f32 lanes per program
+
+
+def _pcg(x):
+    x = x.astype(jnp.uint32)
+    state = x * jnp.uint32(747796405) + jnp.uint32(2891336453)
+    word = ((state >> ((state >> jnp.uint32(28)) + jnp.uint32(4))) ^ state)
+    word = word * jnp.uint32(277803737)
+    return (word >> jnp.uint32(22)) ^ word
+
+
+def _sens_sketch_kernel(theta_ref, g_ref, f_ref, out_ref, *, k: int,
+                        seed: int, block: int):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    theta = theta_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    f = f_ref[...].astype(jnp.float32)
+    # Eq. 8 sensitivity, fused
+    s = jnp.abs(g * theta - 0.5 * f * jnp.square(theta))
+
+    lin = pid.astype(jnp.uint32) * jnp.uint32(block) + \
+        jax.lax.broadcasted_iota(jnp.uint32, (block,), 0)
+    seed_u = jnp.uint32(seed)
+    partial = []
+    for r in range(k):  # unrolled: k is small (paper: 16)
+        h = _pcg(seed_u ^ _pcg(lin * jnp.uint32(k) + jnp.uint32(r)))
+        sign = jnp.where((h >> jnp.uint32(31)) == 0, 1.0, -1.0).astype(jnp.float32)
+        partial.append(jnp.sum(s * sign))
+    out_ref[...] += jnp.stack(partial)
+
+
+def sens_sketch_pallas(theta: jnp.ndarray, g: jnp.ndarray, f: jnp.ndarray,
+                       *, k: int = 16, seed: int = 0,
+                       block: int = DEFAULT_BLOCK,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Fused sensitivity+sketch of FLAT vectors theta/g/f -> (k,) f32.
+
+    Inputs are zero-padded to a block multiple (padded entries have s = 0, so
+    they contribute nothing regardless of their projection sign). The result
+    includes the 1/sqrt(k) JL scale, matching ``repro.core.sketch``.
+    """
+    (d,) = theta.shape
+    n = -(-d // block)
+    dp = n * block
+    pad = [(0, dp - d)]
+    theta, g, f = (jnp.pad(x.astype(jnp.float32), pad) for x in (theta, g, f))
+
+    out = pl.pallas_call(
+        functools.partial(_sens_sketch_kernel, k=k, seed=seed, block=block),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((k,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=interpret,
+    )(theta, g, f)
+    return out / jnp.sqrt(jnp.float32(k))

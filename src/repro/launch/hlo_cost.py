@@ -1,0 +1,463 @@
+"""Trip-count-aware cost analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+but jax lowers ``lax.scan`` to while loops — a 126-layer scan or a 64-chunk
+attention scan is undercounted by its trip count, which would corrupt every
+roofline term. This analyzer walks the computation graph recursively and
+multiplies loop bodies by their trip counts (XLA records them in the while
+op's ``backend_config known_trip_count``; fallback: the loop-condition
+compare constant).
+
+Accounting model (per-device — the module is the SPMD per-device program):
+* flops — dot: 2 * prod(result dims) * prod(lhs contracting dims);
+          elementwise arithmetic / reduce: one flop per element (counted
+          inside fusion bodies too).
+* bytes — HBM-traffic approximation: operand + result bytes at FUSION
+          BOUNDARIES (fusion calls, dots, convolutions, copies, collectives,
+          data-movement ops at top level). Ops inside fusion bodies
+          contribute flops only — the "a fusion reads its inputs once and
+          writes its output once" TPU model.
+* ici_bytes — ring-model estimate per collective (group size parsed from
+          replica_groups), multiplied through loop trip counts.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "f16": 2, "bf16": 2, "s16": 2, "u16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1}
+
+_ARRAY_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "sqrt", "rsqrt", "power", "compare", "select", "and", "or", "xor",
+    "not", "sign", "floor", "ceil", "round-nearest-afz", "clamp", "atan2",
+    "cosine", "sine", "logistic", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "convert", "erf",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "sqrt", "rsqrt", "power",
+                   "logistic", "cosine", "sine", "erf", "atan2"}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute"}
+_BYTES_AT_TOP = {"copy", "transpose", "dynamic-slice", "dynamic-update-slice",
+                 "gather", "scatter", "concatenate", "slice", "pad", "reverse",
+                 "broadcast", "iota", "sort", "select-and-scatter",
+                 "reduce-window", "rng", "cholesky", "triangular-solve"}
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems, nbytes = 0, 0
+    for dt, dims in _ARRAY_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_txt: str
+    operands_txt: str
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # name -> result_txt
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    ici_bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    unparsed_loops: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.ici_bytes += other.ici_bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        self.unparsed_loops += other.unparsed_loops
+        for op, s in other.collectives.items():
+            t = self.collectives.setdefault(
+                op, {"count": 0.0, "out_bytes": 0.0, "ici_bytes": 0.0})
+            for k in t:
+                t[k] += s[k] * mult
+
+
+# `%name = <shape> <opcode>(operands)attrs` — shape may be a tuple with spaces;
+# the opcode is the last bare token before the '(' of the operand list.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*\))?\s*->.*\{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_GROUPS_PAIR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        ls = raw.strip()
+        if cur is None:
+            if ls.endswith("{") and "->" in ls:
+                m = _COMP_RE.match(ls)
+                if m:
+                    cur = Computation(m.group(1))
+                    if ls.startswith("ENTRY"):
+                        entry = cur.name
+            continue
+        if ls == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(ls)
+        if not m:
+            continue
+        name, result_txt, opcode, rest = m.groups()
+        depth = 1
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands, attrs = rest[:end], rest[end + 1:]
+        ins = Instr(name=name, opcode=opcode, result_txt=result_txt,
+                    operands_txt=operands, attrs=attrs)
+        cur.instrs.append(ins)
+        cur.shapes[name] = result_txt
+    return comps, entry
+
+
+def _trip_count_from_cond(cond: Computation) -> Optional[int]:
+    consts = {i.name: int(m.group(1)) for i in cond.instrs
+              if i.opcode == "constant" and (m := _CONST_RE.search(i.operands_txt + i.attrs)
+                                             or re.match(r"(-?\d+)", i.operands_txt))}
+    # constants feeding a compare (possibly via a wrapper fusion)
+    vals = [v for v in consts.values() if v > 0]
+    return max(vals) if vals else None
+
+
+def _group_size(attrs: str, world: int) -> int:
+    m = _GROUPS_PAIR_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(attrs)
+    if m:
+        g = m.group(1).strip()
+        return len(g.split(",")) if g else world
+    return world
+
+
+def _collective_ici(op: str, out_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-gather":
+        return out_bytes * (g - 1) / g
+    if op == "all-reduce":
+        return 2.0 * out_bytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return float(out_bytes) * (g - 1)
+    if op == "all-to-all":
+        return out_bytes * (g - 1) / g
+    return float(out_bytes)  # collective-permute
+
+
+class HloCostAnalyzer:
+    def __init__(self, text: str, world: int):
+        self.comps, self.entry = parse_hlo(text)
+        self.world = world
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def cost(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_cost(self.entry, False)
+
+    def comp_cost(self, name: str, fusion_ctx: bool) -> Cost:
+        key = (name, fusion_ctx)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Cost()  # cycle guard
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is not None:
+            for ins in comp.instrs:
+                total.add(self.instr_cost(comp, ins, fusion_ctx))
+        self._memo[key] = total
+        return total
+
+    def _operand_bytes(self, comp: Computation, ins: Instr) -> Tuple[int, int]:
+        elems, nbytes = 0, 0
+        for name in _OPERAND_NAME_RE.findall(ins.operands_txt):
+            shape_txt = comp.shapes.get(name)
+            if shape_txt:
+                e, b = _shape_elems_bytes(shape_txt)
+                elems += e
+                nbytes += b
+        return elems, nbytes
+
+    def instr_cost(self, comp: Computation, ins: Instr, fusion_ctx: bool) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        res_elems, res_bytes = _shape_elems_bytes(ins.result_txt)
+
+        if op == "while":
+            mb = _BODY_RE.search(ins.attrs)
+            if mb:
+                body = self.comp_cost(mb.group(1), False)
+                trips = None
+                mt = _TRIP_RE.search(ins.attrs)
+                if mt:
+                    trips = int(mt.group(1))
+                else:
+                    mc = _COND_RE.search(ins.attrs)
+                    if mc and mc.group(1) in self.comps:
+                        trips = _trip_count_from_cond(self.comps[mc.group(1)])
+                if trips is None:
+                    trips = 1
+                    c.unparsed_loops += 1
+                c.add(body, trips)
+            return c
+
+        if op in ("call", "conditional", "custom-call"):
+            m = _CALLS_RE.search(ins.attrs)
+            if m:
+                c.add(self.comp_cost(m.group(1), fusion_ctx))
+            return c
+
+        if op == "fusion":
+            m = _CALLS_RE.search(ins.attrs)
+            called = m.group(1) if m else None
+            if called:
+                c.add(self.comp_cost(called, True))
+            if not fusion_ctx:
+                c.bytes += self._fusion_io_bytes(comp, ins, called, res_bytes)
+            return c
+
+        if op == "dot":
+            contract_elems = 1
+            m = _DOT_CONTRACT_RE.search(ins.attrs)
+            lhs_names = _OPERAND_NAME_RE.findall(ins.operands_txt)
+            if m and lhs_names:
+                lhs_shape = comp.shapes.get(lhs_names[0], "")
+                sm = _ARRAY_RE.search(lhs_shape)
+                if sm:
+                    sizes = [int(x) for x in sm.group(2).split(",") if x]
+                    for d in (int(x) for x in m.group(1).split(",") if x):
+                        if d < len(sizes):
+                            contract_elems *= sizes[d]
+            c.flops += 2.0 * res_elems * contract_elems
+            if not fusion_ctx:
+                _, opd_bytes = self._operand_bytes(comp, ins)
+                c.bytes += opd_bytes + res_bytes
+            return c
+
+        if op == "convolution":
+            opd_elems, opd_bytes = self._operand_bytes(comp, ins)
+            c.flops += 2.0 * res_elems * max(opd_elems // max(res_elems, 1), 1)
+            if not fusion_ctx:
+                c.bytes += opd_bytes + res_bytes
+            return c
+
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVES:
+            g = _group_size(ins.attrs, self.world)
+            ici = _collective_ici(base, res_bytes, g)
+            c.ici_bytes += ici
+            s = c.collectives.setdefault(
+                base, {"count": 0.0, "out_bytes": 0.0, "ici_bytes": 0.0})
+            s["count"] += 1
+            s["out_bytes"] += res_bytes
+            s["ici_bytes"] += ici
+            if not fusion_ctx:
+                c.bytes += res_bytes
+            return c
+
+        if op in ELEMENTWISE:
+            c.flops += res_elems
+            if op in _TRANSCENDENTAL:
+                c.transcendentals += res_elems
+            return c
+
+        if op in ("reduce", "reduce-window"):
+            opd_elems, opd_bytes = self._operand_bytes(comp, ins)
+            c.flops += opd_elems
+            if not fusion_ctx:
+                c.bytes += opd_bytes + res_bytes
+            return c
+
+        if op == "dynamic-slice":
+            # reads only the slice (result), not the sliced buffer
+            if not fusion_ctx:
+                c.bytes += 2 * res_bytes
+            return c
+
+        if op == "dynamic-update-slice":
+            # in-place: read-modify-write of the update slice only
+            names = _OPERAND_NAME_RE.findall(ins.operands_txt)
+            upd_bytes = 0
+            if len(names) >= 2:
+                _, upd_bytes = _shape_elems_bytes(comp.shapes.get(names[1], ""))
+            if not fusion_ctx:
+                c.bytes += 2 * upd_bytes
+            return c
+
+        if not fusion_ctx and op in _BYTES_AT_TOP:
+            _, opd_bytes = self._operand_bytes(comp, ins)
+            c.bytes += opd_bytes + res_bytes
+            return c
+
+        return c
+
+    def _fusion_io_bytes(self, comp: Computation, ins: Instr,
+                         called: Optional[str], res_bytes: int) -> float:
+        """HBM traffic of one fusion call, with in-place slice semantics.
+
+        A fusion parameter consumed ONLY as the sliced buffer of
+        dynamic-slice ops contributes the slice bytes (not the whole
+        buffer); a parameter used as the in-place target of a
+        dynamic-update-slice contributes nothing for the read and the
+        update bytes for the write (the result aliases it). This is what
+        makes per-iteration scan input reads / output writes count as
+        slice-sized instead of stacked-buffer-sized.
+        """
+        opd_names = _OPERAND_NAME_RE.findall(ins.operands_txt)
+        cc = self.comps.get(called) if called else None
+        if cc is None:
+            _, opd_bytes = self._operand_bytes(comp, ins)
+            return float(opd_bytes + res_bytes)
+
+        # parameter name -> operand position
+        param_pos: Dict[str, int] = {}
+        for i2 in cc.instrs:
+            if i2.opcode == "parameter":
+                mnum = re.match(r"\s*(\d+)", i2.operands_txt)
+                if mnum:
+                    param_pos[i2.name] = int(mnum.group(1))
+
+        # classify each parameter
+        slice_bytes: Dict[int, int] = {}     # param pos -> effective read bytes
+        aliased_out: Dict[int, int] = {}     # param pos -> write bytes (DUS)
+        uses: Dict[str, List[Instr]] = {p: [] for p in param_pos}
+        for i2 in cc.instrs:
+            for nm in _OPERAND_NAME_RE.findall(i2.operands_txt):
+                if nm in uses:
+                    uses[nm].append(i2)
+        for pname, plist in uses.items():
+            pos = param_pos[pname]
+            if not plist:
+                slice_bytes[pos] = 0
+                continue
+            if all(u.opcode == "dynamic-slice"
+                   and _OPERAND_NAME_RE.findall(u.operands_txt)[:1] == [pname]
+                   for u in plist):
+                _, b = _shape_elems_bytes(plist[0].result_txt)
+                slice_bytes[pos] = b * len(plist)
+            elif all(u.opcode == "dynamic-update-slice"
+                     and _OPERAND_NAME_RE.findall(u.operands_txt)[:1] == [pname]
+                     for u in plist):
+                wb = 0
+                for u in plist:
+                    ops2 = _OPERAND_NAME_RE.findall(u.operands_txt)
+                    if len(ops2) >= 2:
+                        _, ub = _shape_elems_bytes(cc.shapes.get(ops2[1], ""))
+                        wb += ub
+                slice_bytes[pos] = 0       # buffer itself is not streamed
+                aliased_out[pos] = wb
+
+        total = 0.0
+        for pos, nm in enumerate(opd_names):
+            if pos in slice_bytes:
+                total += slice_bytes[pos]
+            else:
+                _, b = _shape_elems_bytes(comp.shapes.get(nm, ""))
+                total += b
+        if aliased_out:
+            total += 2.0 * sum(aliased_out.values())  # RMW of the slices
+        else:
+            total += res_bytes
+        return total
+
+
+def profile_instrs(text: str, world: int, top: int = 20):
+    """Per-instruction (bytes, flops, ici) attribution including loop-nest
+    multipliers — the dry-run 'profiler' used by the §Perf iterations."""
+    an = HloCostAnalyzer(text, world)
+    mult: Dict[str, float] = {}
+
+    def walk(cname: str, m: float):
+        mult[cname] = mult.get(cname, 0.0) + m
+        comp = an.comps.get(cname)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                mb = _BODY_RE.search(ins.attrs)
+                mt = _TRIP_RE.search(ins.attrs)
+                t = int(mt.group(1)) if mt else 1
+                if mb:
+                    walk(mb.group(1), m * t)
+            elif ins.opcode in ("call", "conditional"):
+                mc = _CALLS_RE.search(ins.attrs)
+                if mc:
+                    walk(mc.group(1), m)
+
+    assert an.entry
+    walk(an.entry, 1.0)
+    rows = []
+    for cname, m in mult.items():
+        comp = an.comps[cname]
+        for ins in comp.instrs:
+            if ins.opcode in ("while", "call", "conditional"):
+                continue  # children already attributed via walk
+            c = an.instr_cost(comp, ins, False)
+            if c.bytes or c.flops or c.ici_bytes:
+                rows.append({
+                    "bytes": c.bytes * m, "flops": c.flops * m,
+                    "ici": c.ici_bytes * m, "op": ins.opcode,
+                    "comp": cname, "name": ins.name,
+                    "result": ins.result_txt[:60], "mult": m,
+                })
+    rows.sort(key=lambda r: -(r["bytes"] + r["ici"] * 16))
+    return rows[:top]
+
+
+def analyze(text: str, world: int) -> dict:
+    a = HloCostAnalyzer(text, world)
+    c = a.cost()
+    return {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "ici_bytes_per_device": c.ici_bytes,
+        "transcendentals": c.transcendentals,
+        "collectives": c.collectives,
+        "unparsed_loops": c.unparsed_loops,
+    }

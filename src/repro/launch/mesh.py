@@ -1,0 +1,159 @@
+"""Production meshes and per-architecture sharding-rule resolution.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod (data=16, model=16) = 256 chips, multi-pod
+(pod=2, data=16, model=16) = 512 chips.
+
+``rules_for(cfg, mesh, global_batch)`` resolves the MaxText-style logical
+rules against the concrete architecture: any logical axis whose tensor
+dimension does not divide its mesh-axis product falls back to replication,
+with one targeted upgrade — when an arch's head counts don't divide the
+model axis (xlstm 4H, phi4 24H, arctic 56H, internvl2 14H) but head_dim
+does, attention/recurrent tensor parallelism moves to the head_dim axis.
+This is how every assigned architecture lowers on the same mesh without
+per-arch hand-written specs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.common.sharding import (EXPERT_TP_RULES, PRODUCTION_RULES,
+                                   LogicalRules)
+from repro.models.config import ModelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devices, axes)
+
+
+def axis_dims(cfg: ModelConfig, global_batch: Optional[int] = None) -> Dict[str, List[int]]:
+    """Every concrete tensor dimension each logical axis annotates, per arch.
+    Used to verify divisibility before assigning a mesh axis."""
+    dims: Dict[str, List[int]] = {
+        "embed": [cfg.d_model],
+        "heads": [cfg.num_heads],
+        "kv_heads": [cfg.num_kv_heads],
+        "head_dim": [cfg.head_dim] if cfg.head_dim else [],
+        "vocab": [cfg.vocab_padded],
+        "mlp": [],
+        "expert": [],
+        "expert_mlp": [],
+        "ssm_inner": [],
+    }
+    if "dense" in cfg.ffn_pattern or cfg.d_ff:
+        dims["mlp"].append(cfg.d_ff)
+    if cfg.num_shared_experts:
+        dims["mlp"].append(cfg.shared_d_ff or cfg.num_shared_experts * cfg.moe_d_ff)
+    if cfg.num_experts:
+        dims["expert"].append(cfg.num_experts)
+        dims["expert_mlp"].append(cfg.moe_d_ff)
+    if "mamba" in cfg.block_pattern:
+        dims["ssm_inner"] += [cfg.ssm_inner, 2 * cfg.ssm_inner]
+    if "mlstm" in cfg.block_pattern:
+        inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+        dims["ssm_inner"] += [inner, 2 * inner]
+        dims["heads"].append(cfg.num_heads)
+        dims["head_dim"].append(inner // cfg.num_heads)
+    if "slstm" in cfg.block_pattern:
+        dims["mlp"].append(cfg.slstm_ffn_dim)
+        dims["head_dim"].append(cfg.d_model // cfg.num_heads)
+    if global_batch is not None:
+        dims["batch"] = [global_batch]
+        dims["tokens"] = [global_batch]  # token arrays lead with batch too
+    return {k: [d for d in v if d] for k, v in dims.items()}
+
+
+def _nshards(mesh: Mesh, assign) -> int:
+    if assign is None:
+        return 1
+    axes = assign if isinstance(assign, (list, tuple)) else (assign,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in axes]))
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh,
+              global_batch: Optional[int] = None) -> LogicalRules:
+    world = int(np.prod(mesh.devices.shape))
+    if cfg.pure_data_parallel and global_batch and global_batch >= world:
+        # pure DP only pays off when every chip gets >= 1 sequence; the
+        # small-batch inference shapes fall back to the standard rules
+        return _pure_dp_rules(mesh, global_batch)
+    base = EXPERT_TP_RULES if cfg.expert_tensor_parallel else PRODUCTION_RULES
+    rules = dict(base.rules)
+    # the pod axis only exists on the multi-pod mesh
+    present = set(mesh.axis_names)
+    for name, assign in list(rules.items()):
+        if assign is None:
+            continue
+        axes = assign if isinstance(assign, (list, tuple)) else (assign,)
+        kept = tuple(a for a in axes if a in present)
+        rules[name] = kept if len(kept) > 1 else (kept[0] if kept else None)
+
+    dims = axis_dims(cfg, global_batch)
+    dropped = set()
+    for name, sizes in dims.items():
+        assign = rules.get(name)
+        if assign is None or not sizes:
+            continue
+        ns = _nshards(mesh, assign)
+        if any(d % ns for d in sizes):
+            rules[name] = None
+            dropped.add(name)
+
+    # Targeted fallback: heads-based TP impossible -> head_dim TP, but ONLY
+    # for recurrent mixers. For softmax attention, sharding head_dim makes
+    # every score block contract a sharded dim -> a per-(q,kv)-chunk
+    # all-reduce of the f32 probability block (measured: the single largest
+    # ICI term on internvl2/phi4/arctic). Those archs instead run attention
+    # replicated over `model` (batch-parallel only) — see EXPERIMENTS.md §Perf.
+    if "heads" in dropped and "attn" not in cfg.block_pattern:
+        hd_sizes = dims.get("head_dim", [])
+        ns = _nshards(mesh, base.rules.get("heads"))
+        if hd_sizes and all(d % ns == 0 for d in hd_sizes):
+            rules["head_dim"] = base.rules.get("heads")
+
+    # Decode KV caches: when kv-head TP is impossible, shard the cache over
+    # its sequence dim — decode attention reduces over it with only
+    # (B, H)-sized softmax-stat collectives instead of replicating the cache.
+    if rules.get("kv_heads") is None and "attn" in cfg.block_pattern:
+        rules["cache_seq"] = "model" if "model" in present else None
+    return LogicalRules(rules)
+
+
+def dims_conflict(cfg: ModelConfig) -> set:
+    """Logical axes that must stay replicated for this arch (reserved)."""
+    return set()
+
+
+def _pure_dp_rules(mesh: Mesh, global_batch: Optional[int]) -> LogicalRules:
+    """All weights replicated; batch sharded over the largest axis prefix
+    whose product divides it (gradients sync with one all-reduce)."""
+    names = list(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    best: list = []
+    best_prod = 1
+    for i in range(len(names)):
+        for j in range(i + 1, len(names) + 1):
+            trial = names[i:j]
+            prod = int(np.prod([sizes[a] for a in trial]))
+            if (global_batch is None or global_batch % prod == 0) and prod > best_prod:
+                best, best_prod = trial, prod
+    assign = tuple(best) if len(best) > 1 else (best[0] if best else None)
+    rules = {k: None for k in PRODUCTION_RULES.rules}
+    rules["batch"] = assign
+    rules["tokens"] = assign
+    return LogicalRules(rules)
+
+
+def describe_rules(cfg: ModelConfig, mesh: Mesh, global_batch=None) -> str:
+    r = rules_for(cfg, mesh, global_batch)
+    return "\n".join(f"  {k:16s} -> {v}" for k, v in sorted(r.rules.items()))

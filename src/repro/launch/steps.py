@@ -1,0 +1,100 @@
+"""Lowerable entry points: train_step / prefill_step / encode_step / serve_step.
+
+Each builder binds (cfg, rules) and returns a function whose positional args
+match the ShapeDtypeStructs from ``configs.shapes.input_specs`` plus the
+parameter pytree. The training step is the paper's client local step (SGD);
+serving steps are the inference paths for the decode shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import LogicalRules
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+def make_train_step(cfg: ModelConfig, rules: LogicalRules) -> Callable:
+    def train_step(params, batch, lr):
+        m = max(cfg.grad_accum, 1)
+
+        def loss(p, b):
+            return model_lib.loss_fn(p, b, cfg, rules)
+
+        if m > 1:
+            # gradient accumulation: scan over microbatches; the activation
+            # footprint (and the saved-carry stacks) shrink by m
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                acc_g, acc_l = acc
+                l, g = jax.value_and_grad(loss)(params, mb)
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+            l = lsum / m
+        else:
+            l, grads = jax.value_and_grad(lambda p: loss(p, batch))(params)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, l
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: LogicalRules) -> Callable:
+    def prefill_step(params, batch):
+        return model_lib.prefill(params, batch, cfg, rules)
+    return prefill_step
+
+
+def make_encode_step(cfg: ModelConfig, rules: LogicalRules) -> Callable:
+    def encode_step(params, batch):
+        return model_lib.encode(params, batch, cfg, rules)
+    return encode_step
+
+
+def make_serve_step(cfg: ModelConfig, rules: LogicalRules) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        return model_lib.decode_step(params, cache, tokens, pos, cfg, rules)
+    return serve_step
+
+
+def make_sketch_step(cfg: ModelConfig, rules: LogicalRules, *,
+                     k: int = 16, seed: int = 42) -> Callable:
+    """FedPSA client-upload path at production scale: grads + Fisher diag on
+    a calibration batch, Eq. 8 sensitivity, streaming sketch. The sketch
+    shards with the parameters; kappa needs one k-float all-reduce."""
+    from repro.core.sensitivity import fisher_diagonal, sensitivity_from_parts
+    from repro.core import sketch as sketch_lib
+
+    def sketch_step(params, calib_batch):
+        def loss(p, b):
+            return model_lib.loss_fn(p, b, cfg, rules)
+        grads = jax.grad(loss)(params, calib_batch)
+        fisher = fisher_diagonal(loss, params, calib_batch, num_micro=1)
+        sens = sensitivity_from_parts(params, grads, fisher)
+        return sketch_lib.sketch_tree(sens, seed=seed, k=k)
+    return sketch_step
+
+
+def make_step(mode: str, cfg: ModelConfig, rules: LogicalRules) -> Callable:
+    if mode == "train":
+        return make_train_step(cfg, rules)
+    if mode == "prefill":
+        return make_prefill_step(cfg, rules)
+    if mode == "encode":
+        return make_encode_step(cfg, rules)
+    if mode == "decode":
+        return make_serve_step(cfg, rules)
+    raise ValueError(mode)

@@ -1,0 +1,196 @@
+"""Model configuration.
+
+One dataclass covers every assigned architecture family (dense / moe / ssm /
+hybrid / audio / vlm) plus the paper's small CNN/MLP models. A model is
+described by a *superblock pattern*: `block_pattern` gives the sequence mixer
+kind per layer inside one superblock ("attn" | "mamba" | "mlstm" | "slstm"),
+`ffn_pattern` the feed-forward kind ("dense" | "moe" | "moe+dense" | "none");
+the pattern tiles to `num_layers`, and the layer stack is executed with
+`lax.scan` over superblocks (stacked parameters) to keep the HLO compact at
+126-layer / 16k-dim scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | audio | vlm | cnn | mlp
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    causal: bool = True             # False => encoder-only (hubert)
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    # Superblock patterns (tiled to num_layers).
+    block_pattern: Tuple[str, ...] = ("attn",)
+    ffn_pattern: Tuple[str, ...] = ("dense",)
+    # Attention windowing. None = full attention. When a dense arch is lowered
+    # for long_500k the launcher swaps in `long_context_window`.
+    sliding_window: Optional[int] = None
+    long_context_window: Optional[int] = 8192
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01   # load-balance loss coefficient
+    expert_tensor_parallel: bool = False  # shard per-expert d_ff instead of experts
+    # GShard-style grouped dispatch: tokens are split into G groups aligned
+    # with the data shards; cumsum/scatter/capacity are group-LOCAL, so the
+    # dispatch never materializes (or all-reduces) a global (E, C, D) buffer.
+    # 1 = single global group (the naive baseline).
+    dispatch_groups: int = 1
+    # Pure data parallelism: replicate ALL weights and shard the batch over
+    # every mesh axis whose product divides it. The right regime for ~1B
+    # models at large global batch (model parallelism only adds collectives).
+    pure_data_parallel: bool = False
+    # Gradient accumulation (microbatching) inside train_step: divides the
+    # per-step activation footprint by this factor.
+    grad_accum: int = 1
+    # SSM (mamba)
+    ssm_expand: int = 2
+    ssm_state_dim: int = 16
+    conv_kernel: int = 4
+    dt_rank: int = 0                # 0 => ceil(d_model/16)
+    # xLSTM
+    mlstm_proj_factor: float = 2.0
+    slstm_ffn_factor: float = 4.0 / 3.0
+    # Frontend stubs (audio/vlm): inputs are precomputed embeddings.
+    frontend: Optional[str] = None  # None | "audio" | "vision"
+    num_prefix_tokens: int = 256    # patch tokens prepended for vlm
+    # Vocab padding: embedding/unembedding tables round the vocab up to a
+    # multiple of this so the vocab dim always shards over the model axis
+    # (pad logits are masked in the loss; ids never reference pad rows).
+    pad_vocab_to: int = 128
+    # Numerics / memory knobs
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: str = "full"             # none | full | dots
+    # Two-level remat scan: outer scan over `scan_groups` groups saves only
+    # G carries for backward; the inner layers-in-group scan is inside the
+    # checkpoint and recomputed. Cuts the saved-activation stack from
+    # num_superblocks x (B,S,D) to scan_groups x (B,S,D). 0 = single level.
+    scan_groups: int = 0
+    # Megatron-SP-style sequence sharding of the residual stream between
+    # blocks ("seq_act" -> model axis): activations and the saved carries
+    # shrink by the model-axis size; GSPMD turns the row-parallel all-reduces
+    # into reduce-scatter + all-gather pairs at the block boundaries.
+    seq_shard: bool = False
+    q_chunk: int = 512
+    kv_chunk: int = 2048
+    # Activation function for dense FFN: "swiglu" | "gelu" | "relu"
+    ffn_act: str = "swiglu"
+    tie_embeddings: bool = False
+    # CNN/MLP family (the paper's own models)
+    cnn_channels: Tuple[int, ...] = ()
+    cnn_kernel: int = 5
+    mlp_hidden: Tuple[int, ...] = ()
+    input_hw: Tuple[int, int, int] = (0, 0, 0)  # H, W, C for cnn; (features,) via H
+    num_classes: int = 10
+
+    def __post_init__(self):
+        if self.head_dim is None and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: num_layers {self.num_layers} must tile block_pattern "
+            f"of length {len(self.block_pattern)}"
+        )
+        assert len(self.block_pattern) == len(self.ffn_pattern)
+
+    @property
+    def num_superblocks(self) -> int:
+        return self.num_layers // len(self.block_pattern)
+
+    @property
+    def dt_rank_actual(self) -> int:
+        return self.dt_rank if self.dt_rank > 0 else -(-self.d_model // 16)
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def vocab_padded(self) -> int:
+        m = self.pad_vocab_to
+        return -(-self.vocab_size // m) * m if self.vocab_size else 0
+
+    @property
+    def slstm_ffn_dim(self) -> int:
+        """sLSTM post-cell FFN width, rounded up to a multiple of 128 so the
+        MXU matmul dims stay hardware-aligned and the dim shards over the
+        16-way model axis."""
+        f = int(self.d_model * self.slstm_ffn_factor)
+        return -(-f // 128) * 128
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def has_decode(self) -> bool:
+        return not self.is_encoder_only
+
+    def for_long_context(self) -> "ModelConfig":
+        """Variant used for the 500k-decode shape: enable sliding-window
+        attention on every attention layer (SSM layers are O(1) already)."""
+        if self.long_context_window is None:
+            return self
+        return dataclasses.replace(self, sliding_window=self.long_context_window)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: <=2 superblocks, d_model<=256, <=4 experts."""
+        # Shrink the superblock pattern to two layers that still cover both
+        # mixer kinds of the family (e.g. jamba -> (mamba, attn)).
+        if len(self.block_pattern) > 1:
+            bp = (self.block_pattern[0], self.block_pattern[-1])
+            fp = (self.ffn_pattern[0], self.ffn_pattern[-1])
+        else:
+            bp = self.block_pattern
+            fp = self.ffn_pattern
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.num_heads, 4)
+        n_kv = min(self.num_kv_heads, n_heads)
+        # keep GQA ratio valid
+        while n_heads % n_kv:
+            n_kv -= 1
+        n_exp = min(self.num_experts, 4) if self.num_experts else 0
+        # Lossless capacity (cf >= E/k => no token drops) so the dispatch path
+        # is exactly equal to the dropless oracle in smoke/consistency tests.
+        n_topk = min(self.top_k, 2) if self.top_k else 0
+        cf = max(self.capacity_factor, n_exp / max(n_topk, 1)) if n_exp else self.capacity_factor
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            block_pattern=bp,
+            ffn_pattern=fp,
+            num_layers=2 * len(bp) if len(bp) == 1 else len(bp),
+            d_model=d_model,
+            num_heads=n_heads,
+            num_kv_heads=max(1, n_kv),
+            head_dim=d_model // n_heads,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=n_exp,
+            top_k=n_topk,
+            capacity_factor=cf,
+            num_shared_experts=min(self.num_shared_experts, 1),
+            moe_d_ff=min(self.moe_d_ff, 128) if self.moe_d_ff else 0,
+            shared_d_ff=min(self.shared_d_ff, 128) if self.shared_d_ff else 0,
+            num_prefix_tokens=min(self.num_prefix_tokens, 8),
+            dtype="float32",
+            param_dtype="float32",
+            remat="none",
+            q_chunk=64,
+            kv_chunk=64,
+        )

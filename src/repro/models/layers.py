@@ -1,0 +1,442 @@
+"""Shared neural layers: norms, embeddings, RoPE, chunked attention, FFNs.
+
+Design notes
+------------
+* Pure-JAX, pytree parameters, no flax. Every layer is a pair of functions
+  ``init_*(key, cfg, ...) -> params`` and ``apply(params, x, ...) -> y``.
+* Attention never materializes the full (S x S) score matrix: prefill/train
+  use an online-softmax scanned over KV chunks (jax-native flash attention),
+  which is what makes 32k prefill and the memory roofline honest on TPU.
+* Sliding-window attention masks the same chunked loop (train/prefill) and
+  uses a ring-buffer KV cache at decode time, giving O(window) state for the
+  500k-token decode shape.
+* All activations are annotated with logical sharding axes so the same code
+  lowers on 1 CPU device, a 16x16 pod and the 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.sharding import LogicalRules, with_logical_constraint
+from repro.models.config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def param_dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., 0::2], x32[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (GQA, causal / bidirectional / windowed)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def chunked_attention(
+    q: jnp.ndarray,            # (B, Sq, H, hd)
+    k: jnp.ndarray,            # (B, Sk, Hkv, hd)
+    v: jnp.ndarray,            # (B, Sk, Hkv, hd)
+    *,
+    causal: bool,
+    q_offset: int | jnp.ndarray = 0,   # absolute position of q[0] (for cache append)
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 2048,
+    kv_valid: Optional[jnp.ndarray] = None,  # (B,) number of valid kv positions
+    remat_chunks: bool = False,
+) -> jnp.ndarray:
+    """Flash-style attention: scan over query chunks, inner scan over KV chunks
+    with running (max, sum, acc) online softmax. Never builds (Sq, Sk) scores.
+
+    ``remat_chunks`` checkpoints each query-chunk body so the backward pass
+    recomputes probability blocks per chunk instead of saving every
+    (q_chunk x kv_chunk) block of the layer (flash-backward behaviour).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // kv_chunk)
+    Sq_p, Sk_p = nq * q_chunk, nk * kv_chunk
+
+    qp = _pad_to(q, Sq_p, 1).reshape(B, nq, q_chunk, Hkv, G, hd)
+    kp = _pad_to(k, Sk_p, 1).reshape(B, nk, kv_chunk, Hkv, hd)
+    vp = _pad_to(v, Sk_p, 1).reshape(B, nk, kv_chunk, Hkv, hd)
+
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(kv_chunk)
+    kv_valid_arr = kv_valid if kv_valid is not None else None
+
+    def q_body(_, qi):
+        qc = qp[:, qi]  # (B, qc, Hkv, G, hd)
+        q_pos = q_offset + qi * q_chunk + q_pos_base  # (qc,)
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            kc = kp[:, ki]  # (B, kc, Hkv, hd)
+            vc = vp[:, ki]
+            k_pos = ki * kv_chunk + k_pos_base  # (kc,)
+            # scores: (B, Hkv, G, qc, kc). Inputs stay in model dtype (bf16
+            # feeds the MXU natively); accumulation is f32.
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qc, kc,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > (q_pos[:, None] - window)
+            mask &= (k_pos < Sk)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            if kv_valid_arr is not None:
+                vmask = k_pos[None, :] < kv_valid_arr[:, None]  # (B, kc)
+                s = jnp.where(vmask[:, None, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            # probabilities are cast back to the model dtype for the PV
+            # matmul (halves the HBM-resident score-block traffic; the
+            # accumulator stays f32) — standard flash-attention practice.
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, Hkv, G, qc, hd)
+        return None, jnp.transpose(out, (0, 3, 1, 2, 4))  # (B, qc, Hkv, G, hd)
+
+    if remat_chunks:
+        q_body = jax.checkpoint(q_body)
+    _, outs = jax.lax.scan(q_body, None, jnp.arange(nq))  # (nq, B, qc, Hkv, G, hd)
+    out = jnp.transpose(outs, (1, 0, 2, 3, 4, 5)).reshape(B, Sq_p, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,          # (B, 1, H, hd)
+    k_cache: jnp.ndarray,    # (B, C, Hkv, hd)
+    v_cache: jnp.ndarray,    # (B, C, Hkv, hd)
+    valid: jnp.ndarray,      # (B,) or scalar: number of valid cache slots
+) -> jnp.ndarray:
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    Ring-buffer semantics: every slot with index < valid is a real token; the
+    softmax is permutation-invariant so slot order does not matter.
+    """
+    B, C, Hkv, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(C)
+    valid = jnp.asarray(valid)
+    vmask = pos[None, :] < valid.reshape(-1, 1)  # (B or 1, C)
+    s = jnp.where(vmask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    pd = param_dtype_of(cfg)
+    D, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (D, H, hd), pd),
+        "wk": dense_init(k2, (D, Hkv, hd), pd),
+        "wv": dense_init(k3, (D, Hkv, hd), pd),
+        "wo": dense_init(k4, (H, hd, D), pd, scale=1.0 / math.sqrt(H * hd)),
+    }
+
+
+ATTN_AXES = {
+    "wq": ("embed", "heads", "head_dim"),
+    "wk": ("embed", "kv_heads", "head_dim"),
+    "wv": ("embed", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "embed"),
+}
+
+
+def attention_forward(
+    params, x, cfg: ModelConfig, rules: LogicalRules, positions=None
+):
+    """Full-sequence attention (train / prefill). x: (B, S, D)."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    q = with_logical_constraint(q, rules, ("batch", "seq", "heads", "head_dim"))
+    k = with_logical_constraint(k, rules, ("batch", "seq", "kv_heads", "head_dim"))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(
+        q, k, v,
+        causal=cfg.causal,
+        window=cfg.sliding_window,
+        q_chunk=cfg.q_chunk,
+        kv_chunk=cfg.kv_chunk,
+        remat_chunks=(cfg.remat == "full"),
+    )
+    out = with_logical_constraint(out, rules, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return with_logical_constraint(y, rules, ("batch", "seq", "embed_act"))
+
+
+def attention_cache_size(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    C = attention_cache_size(cfg, max_len)
+    dt = dtype_of(cfg)
+    return {
+        "k": jnp.zeros((batch, C, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, C, cfg.num_kv_heads, cfg.head_dim), dt),
+    }
+
+
+# decode KV caches get their own sequence axis: when kv-head TP is
+# impossible (kv_heads doesn't divide the model axis) the cache shards over
+# its SEQUENCE dim instead — decode attention then reduces over the sharded
+# seq with only (B, H)-sized softmax-stat psums (see launch.mesh.rules_for).
+ATTN_CACHE_AXES = {
+    "k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+}
+
+
+def attention_decode(params, cache, x, pos, cfg: ModelConfig, rules: LogicalRules):
+    """One-token decode. x: (B, 1, D); pos: scalar int32 (same for the batch).
+
+    The cache is a ring buffer of size C (= window, or max_len); slot index is
+    pos % C. `valid` = min(pos + 1, C).
+    """
+    B = x.shape[0]
+    C = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    posb = jnp.full((B, 1), pos)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    slot = jnp.mod(pos, C)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    valid = jnp.minimum(pos + 1, C)
+    out = decode_attention(q, k_cache, v_cache, valid)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return {"k": k_cache, "v": v_cache}, y
+
+
+def attention_fill_cache(params, x, cfg: ModelConfig, rules: LogicalRules,
+                         max_len: Optional[int] = None):
+    """Prefill: run full attention AND return the ring-buffer KV cache.
+
+    ``max_len`` sizes the cache for the decode horizon (>= S + new tokens);
+    defaults to S. With a sliding window the cache is the trailing window.
+    """
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    k = apply_rope(k, positions, cfg.rope_theta)
+    y = attention_forward(params, x, cfg, rules, positions)
+    C = attention_cache_size(cfg, max(max_len or S, S))
+    if C >= S:
+        # token pos i sits at slot i; tail slots stay zero until decode
+        kc = _pad_to(k, C, 1)
+        vc = _pad_to(v, C, 1)
+    else:
+        # last C tokens, laid out at ring slots (S - C + i) % C
+        k_tail = jax.lax.dynamic_slice_in_dim(k, S - C, C, axis=1)
+        v_tail = jax.lax.dynamic_slice_in_dim(v, S - C, C, axis=1)
+        roll = jnp.mod(S - C, C)
+        kc = jnp.roll(k_tail, roll, axis=1)
+        vc = jnp.roll(v_tail, roll, axis=1)
+    return {"k": kc, "v": vc}, y
+
+
+# ---------------------------------------------------------------------------
+# Dense feed-forward (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    pd = param_dtype_of(cfg)
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(k1, (D, F), pd),
+        "w_out": dense_init(k2, (F, D), pd),
+    }
+    if cfg.ffn_act == "swiglu":
+        p["w_gate"] = dense_init(k3, (D, F), pd)
+    return p
+
+
+FFN_AXES = {
+    "w_in": ("embed", "mlp"),
+    "w_out": ("mlp", "embed"),
+    "w_gate": ("embed", "mlp"),
+}
+
+
+def ffn_forward(params, x, cfg: ModelConfig, rules: LogicalRules):
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype))
+    if cfg.ffn_act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    elif cfg.ffn_act == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.ffn_act == "relu2":  # squared ReLU (nemotron / minitron)
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.relu(h)
+    h = with_logical_constraint(h, rules, ("batch", "seq", "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype))
+    return with_logical_constraint(y, rules, ("batch", "seq", "embed_act"))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> dict:
+    """Tables padded to cfg.vocab_padded; pad rows stay zero (never indexed,
+    and pad logits are masked in the loss via mask_vocab_pad)."""
+    pd = param_dtype_of(cfg)
+    Vp = cfg.vocab_padded
+    k1, k2 = jax.random.split(key)
+    tok = dense_init(k1, (cfg.vocab_size, cfg.d_model), pd, scale=1.0)
+    tok = _pad_to(tok, Vp, 0)
+    p = {"tok": tok}
+    if not cfg.tie_embeddings:
+        un = dense_init(k2, (cfg.d_model, cfg.vocab_size), pd)
+        p["unembed"] = _pad_to(un, Vp, 1)
+    return p
+
+
+# The lookup table keeps its vocab dim REPLICATED ("vocab_lookup" -> None):
+# a vocab-sharded gather forces GSPMD into involuntary full rematerialization
+# of the table per step. The unembedding stays vocab-sharded (the matmul
+# partitions cleanly and the big logits tensor shards with it).
+EMBED_AXES = {"tok": ("vocab_lookup", "embed"), "unembed": ("embed", "vocab")}
+
+
+def mask_vocab_pad(logits, cfg: ModelConfig):
+    """-inf the padded vocab columns (elementwise, sharding-compatible)."""
+    Vp = logits.shape[-1]
+    if Vp == cfg.vocab_size:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < cfg.vocab_size, logits, NEG_INF)
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, rules: LogicalRules):
+    x = params["tok"].astype(dtype_of(cfg))[tokens]
+    return with_logical_constraint(x, rules, ("batch", "seq", "embed_act"))
+
+
+def unembed(params, x, cfg: ModelConfig, rules: LogicalRules):
+    if cfg.tie_embeddings:
+        w = params["tok"].astype(x.dtype).T
+    else:
+        w = params["unembed"].astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = mask_vocab_pad(logits, cfg)
+    return with_logical_constraint(logits, rules, ("batch", "seq", "vocab"))

@@ -1,0 +1,660 @@
+"""Unified model assembly for every assigned architecture family.
+
+A model is a stack of *superblocks* executed with ``lax.scan`` over stacked
+parameters (keeps the HLO compact at 126-layer / 16k-dim scale). Each
+superblock is a fixed sequence of positions; position ``p`` has a sequence
+mixer (``attn | mamba | mlstm | slstm``) and a feed-forward kind
+(``dense | moe | moe+dense | none``), both taken from the config patterns.
+
+Three execution paths share the same parameters:
+
+* ``loss_fn`` / ``forward``      — training & evaluation (full sequence)
+* ``prefill``                    — full sequence, additionally returns the
+                                   decode cache (KV ring buffers / SSM states)
+* ``decode_step``                — one token against the cache (``serve_step``)
+
+The paper's CNN / linear models (MNIST, FMNIST, CIFAR) live here too — the
+federated runtime trains them for the accuracy experiments, while the
+transformer families exercise the production dry-run meshes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.sharding import LogicalRules, with_logical_constraint
+from repro.models import layers, moe, ssm
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Superblock init / axes
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: ModelConfig):
+    pd = layers.param_dtype_of(cfg)
+    if cfg.family == "audio":
+        return lambda d: layers.init_layernorm(d, pd)
+    return lambda d: layers.init_rmsnorm(d, pd)
+
+
+def _norm_apply(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return lambda p, x: layers.layernorm(p, x, cfg.norm_eps)
+    return lambda p, x: layers.rmsnorm(p, x, cfg.norm_eps)
+
+
+_MIXER_INIT = {
+    "attn": layers.init_attention,
+    "mamba": ssm.init_mamba,
+    "mlstm": ssm.init_mlstm,
+    "slstm": ssm.init_slstm,
+}
+_MIXER_AXES = {
+    "attn": layers.ATTN_AXES,
+    "mamba": ssm.MAMBA_AXES,
+    "mlstm": ssm.MLSTM_AXES,
+    "slstm": ssm.SLSTM_AXES,
+}
+
+
+def init_superblock(key, cfg: ModelConfig) -> dict:
+    """One superblock: a dict keyed ``p{i}`` per position."""
+    out = {}
+    keys = jax.random.split(key, len(cfg.block_pattern))
+    ninit = _norm_init(cfg)
+    for i, (mix, ffn) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        km, kf = jax.random.split(keys[i])
+        pos: Dict[str, Any] = {
+            "norm1": ninit(cfg.d_model),
+            "mixer": _MIXER_INIT[mix](km, cfg),
+        }
+        if ffn != "none":
+            pos["norm2"] = ninit(cfg.d_model)
+            if ffn == "dense":
+                pos["ffn"] = layers.init_ffn(kf, cfg)
+            elif ffn == "moe":
+                pos["ffn"] = init_moe_guarded(kf, cfg)
+            elif ffn == "moe+dense":
+                k1, k2 = jax.random.split(kf)
+                pos["ffn"] = {"moe": init_moe_guarded(k1, cfg),
+                              "dense": layers.init_ffn(k2, cfg)}
+            else:
+                raise ValueError(ffn)
+        out[f"p{i}"] = pos
+    return out
+
+
+def init_moe_guarded(key, cfg: ModelConfig):
+    assert cfg.num_experts > 0 and cfg.top_k > 0, cfg.name
+    return moe.init_moe(key, cfg)
+
+
+_NORM_AXES = {"scale": ("embed_act",)}
+_NORM_AXES_LN = {"scale": ("embed_act",), "bias": ("embed_act",)}
+
+
+def superblock_axes(cfg: ModelConfig) -> dict:
+    naxes = _NORM_AXES_LN if cfg.family == "audio" else _NORM_AXES
+    out = {}
+    for i, (mix, ffn) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        pos = {"norm1": naxes, "mixer": dict(_MIXER_AXES[mix])}
+        if mix == "attn":
+            pass
+        if ffn != "none":
+            pos["norm2"] = naxes
+            if ffn == "dense":
+                pos["ffn"] = dict(layers.FFN_AXES)
+            elif ffn == "moe":
+                pos["ffn"] = _moe_axes(cfg)
+            elif ffn == "moe+dense":
+                pos["ffn"] = {"moe": _moe_axes(cfg), "dense": dict(layers.FFN_AXES)}
+        out[f"p{i}"] = pos
+    return out
+
+
+def _moe_axes(cfg: ModelConfig) -> dict:
+    ax = dict(moe.MOE_AXES)
+    if cfg.num_shared_experts == 0:
+        ax.pop("shared", None)
+    return ax
+
+
+def _prune_axes(axes, params):
+    """Drop axis entries whose key is absent from params (e.g. swiglu gate)."""
+    if isinstance(params, dict):
+        return {k: _prune_axes(axes[k], v) for k, v in params.items()}
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / axes
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    if cfg.family == "cnn":
+        return init_cnn(key, cfg)
+    if cfg.family == "mlp":
+        return init_mlp(key, cfg)
+    k_embed, k_blocks, k_final = jax.random.split(key, 3)
+    nsb = cfg.num_superblocks
+    blocks = jax.vmap(lambda k: init_superblock(k, cfg))(jax.random.split(k_blocks, nsb))
+    params = {
+        "blocks": blocks,
+        "final_norm": _norm_init(cfg)(cfg.d_model),
+    }
+    if cfg.frontend == "audio":
+        # Frontend stub: inputs are precomputed frame embeddings (B, S, D).
+        # A learned input projection + cls head stand in for the conv codec.
+        params["in_proj"] = layers.dense_init(k_embed, (cfg.d_model, cfg.d_model),
+                                              layers.param_dtype_of(cfg))
+        cls = layers.dense_init(k_final, (cfg.d_model, cfg.vocab_size),
+                                layers.param_dtype_of(cfg))
+        params["cls"] = layers._pad_to(cls, cfg.vocab_padded, 1)
+    else:
+        params["embed"] = layers.init_embed(k_embed, cfg)
+        if cfg.frontend == "vision":
+            # projector from (stubbed) vision embeddings into the LM space
+            params["proj"] = layers.dense_init(k_final, (cfg.d_model, cfg.d_model),
+                                               layers.param_dtype_of(cfg))
+    return params
+
+
+def param_axes(cfg: ModelConfig, params: Optional[dict] = None) -> dict:
+    """Pytree of logical-axis tuples matching ``init_params`` structure.
+
+    Stacked superblock leaves get a leading ``layers`` axis.
+    """
+    if cfg.family in ("cnn", "mlp"):
+        if params is None:
+            params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+        return jax.tree_util.tree_map(lambda x: tuple([None] * x.ndim), params)
+    sb = superblock_axes(cfg)
+    sb = jax.tree_util.tree_map(
+        lambda ax: ("layers",) + ax,
+        sb,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+    naxes = _NORM_AXES_LN if cfg.family == "audio" else _NORM_AXES
+    axes = {"blocks": sb, "final_norm": naxes}
+    if cfg.frontend == "audio":
+        axes["in_proj"] = ("embed", "embed_act")
+        axes["cls"] = ("embed", "vocab")
+    else:
+        axes["embed"] = dict(layers.EMBED_AXES)
+        if cfg.tie_embeddings:
+            axes["embed"].pop("unembed")
+        if cfg.frontend == "vision":
+            axes["proj"] = ("embed", "embed_act")
+    if params is None:
+        params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return _prune_axes(axes, params)
+
+
+# ---------------------------------------------------------------------------
+# Superblock forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(pos_params, ffn_kind, x, cfg, rules):
+    if ffn_kind == "dense":
+        return layers.ffn_forward(pos_params["ffn"], x, cfg, rules), 0.0
+    if ffn_kind == "moe":
+        return moe.moe_forward(pos_params["ffn"], x, cfg, rules)
+    if ffn_kind == "moe+dense":
+        y_moe, aux = moe.moe_forward(pos_params["ffn"]["moe"], x, cfg, rules)
+        y_dense = layers.ffn_forward(pos_params["ffn"]["dense"], x, cfg, rules)
+        return y_moe + y_dense, aux
+    raise ValueError(ffn_kind)
+
+
+def _residual_constraint(x, cfg: ModelConfig, rules: LogicalRules):
+    """Between-block residual-stream sharding (Megatron-SP when seq_shard)."""
+    if cfg.seq_shard:
+        return with_logical_constraint(x, rules, ("batch", "seq_act", "embed_act"))
+    return with_logical_constraint(x, rules, ("batch", None, "embed_act"))
+
+
+def superblock_forward(params, x, cfg: ModelConfig, rules: LogicalRules, positions):
+    napply = _norm_apply(cfg)
+    aux_total = jnp.float32(0.0)
+    for i, (mix, ffn) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        pp = params[f"p{i}"]
+        h = napply(pp["norm1"], x)
+        if mix == "attn":
+            y = layers.attention_forward(pp["mixer"], h, cfg, rules, positions)
+        elif mix == "mamba":
+            y = ssm.mamba_forward(pp["mixer"], h, cfg, rules)
+        elif mix == "mlstm":
+            y = ssm.mlstm_forward(pp["mixer"], h, cfg, rules)
+        else:
+            y = ssm.slstm_forward(pp["mixer"], h, cfg, rules)
+        x = _residual_constraint(x + y, cfg, rules)
+        if ffn != "none":
+            h = napply(pp["norm2"], x)
+            y, aux = _ffn_apply(pp, ffn, h, cfg, rules)
+            x = _residual_constraint(x + y, cfg, rules)
+            aux_total = aux_total + aux
+    return x, aux_total
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def backbone_forward(params, x, cfg: ModelConfig, rules: LogicalRules,
+                     positions=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run all superblocks. x: (B, S, D) -> (hidden, aux_loss).
+
+    With ``cfg.scan_groups = G > 1`` the layer stack runs as a two-level
+    scan: the outer scan saves only G carries for backward, and the inner
+    scan over superblocks-per-group is inside the jax.checkpoint and is
+    recomputed — the saved-activation stack shrinks num_superblocks/G x.
+    """
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    x = _residual_constraint(x, cfg, rules)
+
+    def body(carry, sb_params):
+        h, aux = carry
+        h, a = superblock_forward(sb_params, h, cfg, rules, positions)
+        return (h, aux + a), None
+
+    G = cfg.scan_groups
+    nsb = cfg.num_superblocks
+    if G and G > 1 and nsb % G == 0:
+        blocks = jax.tree_util.tree_map(
+            lambda a: a.reshape((G, nsb // G) + a.shape[1:]), params["blocks"])
+        # sqrt-remat: checkpoint BOTH levels. The outer checkpoint keeps the
+        # saved stack at G carries; the inner checkpoint makes the group
+        # backward re-derive one superblock's intermediates at a time instead
+        # of holding all nsb/G layers' attention blocks simultaneously.
+        inner_body = _remat_wrap(body, cfg)
+
+        def group_body(carry, group_params):
+            out, _ = jax.lax.scan(inner_body, carry, group_params)
+            return out, None
+
+        group_body = _remat_wrap(group_body, cfg)
+        (x, aux), _ = jax.lax.scan(group_body, (x, jnp.float32(0.0)), blocks)
+    else:
+        body = _remat_wrap(body, cfg)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    x = _norm_apply(cfg)(params["final_norm"], x)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding of heterogeneous inputs
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch: dict, cfg: ModelConfig, rules: LogicalRules):
+    """Returns (x, label_mask_extra) where x: (B, S, D)."""
+    if cfg.frontend == "audio":
+        x = batch["features"].astype(layers.dtype_of(cfg))
+        x = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+        return with_logical_constraint(x, rules, ("batch", "seq", "embed_act"))
+    tok = layers.embed_tokens(params["embed"], batch["tokens"], cfg, rules)
+    if cfg.frontend == "vision" and "patches" in batch:
+        p = batch["patches"].astype(tok.dtype)
+        p = jnp.einsum("bpd,de->bpe", p, params["proj"].astype(tok.dtype))
+        tok = jnp.concatenate([p, tok], axis=1)
+    return with_logical_constraint(tok, rules, ("batch", "seq", "embed_act"))
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence so full-vocab f32 logits never materialize)
+# ---------------------------------------------------------------------------
+
+def _xent_from_logits(logits, labels):
+    """logits (N, V) any dtype (pad vocab columns already masked);
+    labels (N,) int32, <0 = masked. f32 math."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def chunked_cross_entropy(hidden, unembed_w, labels, cfg: ModelConfig,
+                          rules: LogicalRules, chunk: int = 1024):
+    """hidden (B, S, D); unembed_w (D, V); labels (B, S)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    Sp = n * chunk
+    if Sp != S:
+        hidden = jnp.pad(hidden, ((0, 0), (0, Sp - S), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, Sp - S)), constant_values=-1)
+    hid = hidden.reshape(B, n, chunk, D)
+    lab = labels.reshape(B, n, chunk)
+
+    def body(carry, idx):
+        tot, cnt = carry
+        h = hid[:, idx].reshape(B * chunk, D)
+        logits = jnp.einsum("nd,dv->nv", h, unembed_w.astype(h.dtype))
+        logits = layers.mask_vocab_pad(logits, cfg)
+        logits = with_logical_constraint(logits, rules, ("tokens", "vocab"))
+        t, c = _xent_from_logits(logits, lab[:, idx].reshape(-1))
+        return (tot + t, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 jnp.arange(n))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _unembed_weight(params, cfg: ModelConfig):
+    if cfg.frontend == "audio":
+        return params["cls"]
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"].T
+    return params["embed"]["unembed"]
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, rules: LogicalRules):
+    """Mean next-token (LM) / per-frame (audio) cross entropy + MoE aux."""
+    if cfg.family == "cnn":
+        return cnn_loss(params, batch, cfg)
+    if cfg.family == "mlp":
+        return mlp_loss(params, batch, cfg)
+    x = embed_inputs(params, batch, cfg, rules)
+    hidden, aux = backbone_forward(params, x, cfg, rules)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "patches" in batch:
+        # patch positions carry no labels
+        P = batch["patches"].shape[1]
+        pad = jnp.full(labels.shape[:1] + (P,), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    if cfg.causal:
+        # predict token t+1 from position t
+        hidden = hidden[:, :-1]
+        labels = labels[:, 1:]
+    w = _unembed_weight(params, cfg)
+    ce = chunked_cross_entropy(hidden, w, labels, cfg, rules)
+    return ce + aux
+
+
+def forward_logits(params, batch: dict, cfg: ModelConfig, rules: LogicalRules):
+    """Full logits (small models / eval only)."""
+    x = embed_inputs(params, batch, cfg, rules)
+    hidden, _ = backbone_forward(params, x, cfg, rules)
+    w = _unembed_weight(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype))
+    logits = layers.mask_vocab_pad(logits, cfg)
+    return with_logical_constraint(logits, rules, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Decode path (serve_step): cache init / prefill / one-token step
+# ---------------------------------------------------------------------------
+
+def _pos_cache_init(mix: str, cfg: ModelConfig, batch: int, max_len: int):
+    if mix == "attn":
+        return layers.init_attention_cache(cfg, batch, max_len)
+    if mix == "mamba":
+        return ssm.init_mamba_state(cfg, batch)
+    if mix == "mlstm":
+        return ssm.init_mlstm_state(cfg, batch)
+    return ssm.init_slstm_state(cfg, batch)
+
+
+_POS_CACHE_AXES = {
+    "attn": layers.ATTN_CACHE_AXES,
+    "mamba": ssm.MAMBA_STATE_AXES,
+    "mlstm": ssm.MLSTM_STATE_AXES,
+    "slstm": ssm.SLSTM_STATE_AXES,
+}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    assert cfg.has_decode, f"{cfg.name} is encoder-only: no decode path"
+    one = {f"p{i}": _pos_cache_init(mix, cfg, batch, max_len)
+           for i, mix in enumerate(cfg.block_pattern)}
+    nsb = cfg.num_superblocks
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (nsb,) + x.shape), one)
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    one = {f"p{i}": dict(_POS_CACHE_AXES[mix])
+           for i, mix in enumerate(cfg.block_pattern)}
+    return jax.tree_util.tree_map(
+        lambda ax: ("layers",) + ax, one,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def superblock_decode(params, cache, x, pos, cfg: ModelConfig, rules: LogicalRules):
+    napply = _norm_apply(cfg)
+    new_cache = {}
+    for i, (mix, ffn) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        pp = params[f"p{i}"]
+        h = napply(pp["norm1"], x)
+        if mix == "attn":
+            c, y = layers.attention_decode(pp["mixer"], cache[f"p{i}"], h, pos, cfg, rules)
+        elif mix == "mamba":
+            c, y = ssm.mamba_decode(pp["mixer"], cache[f"p{i}"], h, cfg)
+        elif mix == "mlstm":
+            c, y = ssm.mlstm_decode(pp["mixer"], cache[f"p{i}"], h, cfg)
+        else:
+            c, y = ssm.slstm_decode(pp["mixer"], cache[f"p{i}"], h, cfg)
+        new_cache[f"p{i}"] = c
+        x = x + y
+        if ffn != "none":
+            h = napply(pp["norm2"], x)
+            y, _ = _ffn_apply(pp, ffn, h, cfg, rules)
+            x = x + y
+    return new_cache, x
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, rules: LogicalRules):
+    """One-token decode. tokens: (B, 1) int32; pos: scalar int32.
+
+    Returns (new_cache, logits (B, 1, V)).
+    """
+    x = layers.embed_tokens(params["embed"], tokens, cfg, rules)
+
+    def body(h, xs):
+        sb_params, sb_cache = xs
+        c, h = superblock_decode(sb_params, sb_cache, h, pos, cfg, rules)
+        return h, c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = _norm_apply(cfg)(params["final_norm"], x)
+    w = _unembed_weight(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = layers.mask_vocab_pad(logits, cfg)
+    return new_cache, with_logical_constraint(logits, rules, ("batch", "seq", "vocab"))
+
+
+def superblock_prefill(params, x, cfg: ModelConfig, rules: LogicalRules, positions,
+                       max_len: Optional[int] = None):
+    napply = _norm_apply(cfg)
+    cache = {}
+    for i, (mix, ffn) in enumerate(zip(cfg.block_pattern, cfg.ffn_pattern)):
+        pp = params[f"p{i}"]
+        h = napply(pp["norm1"], x)
+        if mix == "attn":
+            c, y = layers.attention_fill_cache(pp["mixer"], h, cfg, rules, max_len)
+        elif mix == "mamba":
+            c, y = ssm.mamba_fill_state(pp["mixer"], h, cfg, rules)
+        elif mix == "mlstm":
+            c, y = ssm.mlstm_fill_state(pp["mixer"], h, cfg, rules)
+        else:
+            c, y = ssm.slstm_fill_state(pp["mixer"], h, cfg, rules)
+        cache[f"p{i}"] = c
+        x = x + y
+        if ffn != "none":
+            h = napply(pp["norm2"], x)
+            y, _ = _ffn_apply(pp, ffn, h, cfg, rules)
+            x = x + y
+    return cache, x
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, rules: LogicalRules,
+            max_len: Optional[int] = None):
+    """Full-sequence prefill. Returns (cache, last-position logits (B, V)).
+
+    ``max_len`` sizes KV caches for the decode horizon (defaults to S).
+    """
+    x = embed_inputs(params, batch, cfg, rules)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(h, sb_params):
+        c, h = superblock_prefill(sb_params, h, cfg, rules, positions, max_len)
+        return h, c
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    x = _norm_apply(cfg)(params["final_norm"], x)
+    w = _unembed_weight(params, cfg)
+    last = x[:, -1]
+    logits = jnp.einsum("bd,dv->bv", last, w.astype(x.dtype))
+    logits = layers.mask_vocab_pad(logits, cfg)
+    return cache, with_logical_constraint(logits, rules, ("batch", "vocab"))
+
+
+def encode(params, batch: dict, cfg: ModelConfig, rules: LogicalRules):
+    """Encoder-only forward (hubert): per-frame logits."""
+    x = embed_inputs(params, batch, cfg, rules)
+    hidden, _ = backbone_forward(params, x, cfg, rules)
+    w = _unembed_weight(params, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype))
+    logits = layers.mask_vocab_pad(logits, cfg)
+    return with_logical_constraint(logits, rules, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Paper models: CNN (MNIST / CIFAR) and linear / MLP (FMNIST)
+# ---------------------------------------------------------------------------
+
+def init_cnn(key, cfg: ModelConfig) -> dict:
+    H, W, C = cfg.input_hw
+    ks = jax.random.split(key, len(cfg.cnn_channels) + 3)
+    params = {}
+    in_c = C
+    h, w = H, W
+    for i, ch in enumerate(cfg.cnn_channels):
+        params[f"conv{i}"] = {
+            "w": layers.dense_init(ks[i], (cfg.cnn_kernel, cfg.cnn_kernel, in_c, ch),
+                                   jnp.float32, scale=1.0 / math.sqrt(cfg.cnn_kernel ** 2 * in_c)),
+            "b": jnp.zeros((ch,), jnp.float32),
+        }
+        in_c = ch
+        h, w = h // 2, w // 2  # 2x2 maxpool each conv
+    flat = h * w * in_c
+    dims = (flat,) + tuple(cfg.mlp_hidden) + (cfg.num_classes,)
+    for i in range(len(dims) - 1):
+        params[f"fc{i}"] = {
+            "w": layers.dense_init(ks[len(cfg.cnn_channels) + i], (dims[i], dims[i + 1]), jnp.float32),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+        }
+    return params
+
+
+def cnn_forward(params, x, cfg: ModelConfig):
+    """x: (B, H, W, C) f32 -> logits (B, num_classes)."""
+    for i in range(len(cfg.cnn_channels)):
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + p["b"])
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(cfg.mlp_hidden) + 1
+    for i in range(n_fc):
+        p = params[f"fc{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n_fc - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def cnn_loss(params, batch, cfg: ModelConfig):
+    logits = cnn_forward(params, batch["x"], cfg)
+    return _mean_xent(logits, batch["y"])
+
+
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    H, _, _ = cfg.input_hw
+    dims = (H,) + tuple(cfg.mlp_hidden) + (cfg.num_classes,)
+    ks = jax.random.split(key, len(dims))
+    return {
+        f"fc{i}": {
+            "w": layers.dense_init(ks[i], (dims[i], dims[i + 1]), jnp.float32),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),  # paper: bias init 0
+        }
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_forward(params, x, cfg: ModelConfig):
+    n = len(cfg.mlp_hidden) + 1
+    for i in range(n):
+        p = params[f"fc{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def mlp_loss(params, batch, cfg: ModelConfig):
+    return _mean_xent(mlp_forward(params, batch["x"], cfg), batch["y"])
+
+
+def _mean_xent(logits, y):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def predict(params, x, cfg: ModelConfig):
+    if cfg.family == "cnn":
+        return jnp.argmax(cnn_forward(params, x, cfg), axis=-1)
+    if cfg.family == "mlp":
+        return jnp.argmax(mlp_forward(params, x, cfg), axis=-1)
+    raise ValueError(cfg.family)
+
+
+def accuracy(params, batch, cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.mean((predict(params, batch["x"], cfg) == batch["y"]).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (eval_shape — no allocation, works at 405B scale)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig) -> Tuple[int, int]:
+    """Returns (total, active) parameter counts. ``active`` discounts routed
+    experts to top_k/E (MoE); equals total for dense models."""
+    shapes = jax.eval_shape(functools.partial(init_params, jax.random.PRNGKey(0), cfg))
+    total = 0
+    expert_total = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if any(k in ("w_in", "w_gate", "w_out") for k in keys) and cfg.num_experts > 0:
+            # routed-expert weights carry an E dim right after the stacked
+            # superblock (layers) dim: (layers, E, D, F)
+            if len(leaf.shape) >= 3 and cfg.num_experts in leaf.shape[:2]:
+                expert_total += n
+    if cfg.num_experts > 0 and cfg.top_k > 0:
+        active = total - expert_total + expert_total * cfg.top_k // cfg.num_experts
+    else:
+        active = total
+    return total, active

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts feed-forward with token-choice top-k capacity routing.
+
+GShard-style dispatch: each token picks its top-k experts; a cumulative-sum
+position assignment gives every (token, expert) choice a slot in a fixed
+capacity buffer ``(E, C, D)``; overflowing tokens are dropped (weighted by the
+capacity factor). The buffer is expert-sharded over the ``model`` mesh axis
+(expert parallelism) unless ``cfg.expert_tensor_parallel`` — used when the
+expert count does not divide the axis (qwen2-moe: 60 experts) — in which case
+experts are replicated and the per-expert hidden dim is tensor-parallel.
+
+Supports the assigned MoE variants:
+* qwen2-moe-a2.7b: 60 routed top-4 + 4 shared experts (always-on dense path)
+* jamba-v0.1-52b:  16 routed top-2 (on alternating layers)
+* arctic-480b:     128 routed top-2 + dense residual FFN in parallel
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import LogicalRules, with_logical_constraint
+from repro.models.config import ModelConfig
+from repro.models import layers
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    pd = layers.param_dtype_of(cfg)
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(k1, (D, E), pd, scale=0.02),
+        "w_in": layers.dense_init(k2, (E, D, F), pd),
+        "w_gate": layers.dense_init(k3, (E, D, F), pd),
+        "w_out": layers.dense_init(k4, (E, F, D), pd, scale=1.0 / math.sqrt(F)),
+    }
+    if cfg.num_shared_experts > 0:
+        sf = cfg.shared_d_ff or cfg.num_shared_experts * F
+        p["shared"] = layers.init_ffn(k5, cfg, d_ff=sf)
+    return p
+
+
+MOE_AXES = {
+    "router": ("embed", None),
+    "w_in": ("expert", "embed", "expert_mlp"),
+    "w_gate": ("expert", "embed", "expert_mlp"),
+    "w_out": ("expert", "expert_mlp", "embed"),
+    "shared": layers.FFN_AXES,
+}
+
+
+def moe_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(math.ceil(cfg.top_k * num_tokens * cfg.capacity_factor / cfg.num_experts))
+    return max(c, 1)
+
+
+def moe_forward(params, x, cfg: ModelConfig, rules: LogicalRules):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Grouped token-choice dispatch: tokens split into ``cfg.dispatch_groups``
+    groups (the group dim carries the "batch" sharding, aligning groups with
+    data shards); cumsum position assignment, capacity, scatter and combine
+    are group-LOCAL, so no global (E, C, D) buffer is ever materialized or
+    all-reduced. With dispatch_groups=1 this is the classic single-group
+    GShard dispatch.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    G = max(cfg.dispatch_groups, 1)
+    if T % G:
+        G = 1
+    Tg = T // G
+    C = moe_capacity(cfg, Tg)
+
+    g_ax = "batch" if G > 1 else None  # never shard a size-1 group dim
+    xt = x.reshape(G, Tg, D)
+    xt = with_logical_constraint(xt, rules, (g_ax, "tokens" if G == 1 else None, "embed_act"))
+
+    logits = jnp.einsum("gtd,de->gte", xt,
+                        params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Tg, E)
+    top_p, top_e = jax.lax.top_k(probs, K)   # (G, Tg, K)
+    if cfg.name.startswith("qwen2-moe"):
+        # qwen renormalizes the selected probs
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))
+    one_hot_all = jax.nn.one_hot(top_e, E, dtype=jnp.float32)       # (G, Tg, K, E)
+    fe = jnp.mean(jnp.sum(one_hot_all, axis=2), axis=(0, 1))        # fraction routed
+    aux = cfg.router_aux_coef * E * jnp.sum(fe * me)
+
+    # Group-local position-in-expert via cumsum over the (Tg*K) choice list.
+    choice_e = top_e.reshape(G, Tg * K)
+    choice_p = top_p.reshape(G, Tg * K)
+    oh = jax.nn.one_hot(choice_e, E, dtype=jnp.int32)               # (G, Tg*K, E)
+    pos = jnp.cumsum(oh, axis=1) - 1                                # per-group position
+    pos_in_e = jnp.sum(pos * oh, axis=-1)                           # (G, Tg*K)
+    keep = (pos_in_e < C)
+    slot = jnp.where(keep, pos_in_e, 0)
+
+    tok_idx = jnp.repeat(jnp.arange(Tg), K)                         # shared per group
+    w = jnp.where(keep, choice_p, 0.0).astype(jnp.float32)
+
+    def dispatch(xt_g, choice_e_g, slot_g, keep_g):
+        buf = jnp.zeros((E, C, D), xt_g.dtype)
+        src = xt_g[tok_idx] * keep_g[:, None].astype(xt_g.dtype)
+        return buf.at[choice_e_g, slot_g].add(src)
+
+    buf = jax.vmap(dispatch)(xt, choice_e, slot, keep)              # (G, E, C, D)
+    buf = with_logical_constraint(
+        buf, rules, (g_ax, "expert", "expert_capacity", "embed_act"))
+
+    # Expert computation (SwiGLU), batched over groups and experts.
+    h_in = jnp.einsum("gecd,edf->gecf", buf, params["w_in"].astype(x.dtype))
+    h_gate = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(x.dtype))
+    h = jax.nn.silu(h_gate) * h_in
+    h = with_logical_constraint(
+        h, rules, (g_ax, "expert", "expert_capacity", "expert_mlp"))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_out"].astype(x.dtype))
+    out_buf = with_logical_constraint(
+        out_buf, rules, (g_ax, "expert", "expert_capacity", "embed_act"))
+
+    def combine(out_g, choice_e_g, slot_g, w_g):
+        gathered = out_g[choice_e_g, slot_g].astype(jnp.float32) * w_g[:, None]
+        return jnp.zeros((Tg, D), jnp.float32).at[tok_idx].add(gathered)
+
+    y = jax.vmap(combine)(out_buf, choice_e, slot, w).astype(x.dtype)  # (G, Tg, D)
+
+    if "shared" in params:
+        y = y + layers.ffn_forward(params["shared"], x, cfg, rules).reshape(G, Tg, D)
+
+    y = with_logical_constraint(y, rules, (g_ax, "tokens" if G == 1 else None, "embed_act"))
+    return y.reshape(B, S, D), aux
+
+
+def moe_forward_dense(params, x, cfg: ModelConfig, rules: LogicalRules):
+    """Reference dropless implementation: every expert sees every token.
+
+    O(E) more FLOPs than dispatch — used as the correctness oracle in tests
+    and for tiny smoke configs where capacity dropping would add noise.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    xt = x.reshape(B * S, D)
+    logits = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)
+    if cfg.name.startswith("qwen2-moe"):
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    gate = jnp.zeros_like(probs).at[jnp.arange(xt.shape[0])[:, None], top_e].set(top_p)
+
+    h_in = jnp.einsum("td,edf->etf", xt, params["w_in"].astype(x.dtype))
+    h_gate = jnp.einsum("td,edf->etf", xt, params["w_gate"].astype(x.dtype))
+    h = jax.nn.silu(h_gate) * h_in
+    out = jnp.einsum("etf,efd->etd", h, params["w_out"].astype(x.dtype))
+    y = jnp.einsum("etd,te->td", out.astype(jnp.float32), gate).astype(x.dtype)
+
+    me = jnp.mean(probs, axis=0)
+    fe = jnp.mean(jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(fe * me)
+
+    if "shared" in params:
+        y = y + layers.ffn_forward(params["shared"], x, cfg, rules).reshape(-1, D)
+    return y.reshape(B, S, D), aux

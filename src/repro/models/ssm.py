@@ -1,0 +1,423 @@
+"""Recurrent sequence mixers: Mamba (S6), mLSTM and sLSTM (xLSTM).
+
+All three share the framework's mixer contract:
+
+    init_<kind>(key, cfg)                     -> params
+    <kind>_forward(params, x, cfg, rules)     -> y               (train/prefill)
+    init_<kind>_state(cfg, batch)             -> state           (decode cache)
+    <kind>_decode(params, state, x, cfg)      -> (state, y)      (one token)
+    <kind>_fill_state(params, x, cfg, rules)  -> (state, y)      (prefill+cache)
+
+Training/prefill run a `lax.scan` over time with a compact carry, so the HLO
+stays small and the 500k-token decode shape needs only O(1) state — this is
+the sub-quadratic path that lets the SSM/hybrid architectures run long_500k.
+
+TPU note: the recurrences are formulated as dense per-step einsums (MXU
+friendly); the mLSTM matrix memory (H, hd, hd) maps onto the systolic array
+directly. A chunkwise-parallel Pallas kernel for mLSTM is a perf-iteration
+candidate recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import LogicalRules, with_logical_constraint
+from repro.models.config import ModelConfig
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6) — selective state-space model
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    pd = layers.param_dtype_of(cfg)
+    D, E, N, K = cfg.d_model, cfg.ssm_inner, cfg.ssm_state_dim, cfg.conv_kernel
+    R = cfg.dt_rank_actual
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A
+    a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (E, N)))
+    return {
+        "in_proj": layers.dense_init(ks[0], (D, 2 * E), pd),
+        "conv_w": layers.dense_init(ks[1], (K, E), pd, scale=1.0 / math.sqrt(K)),
+        "conv_b": jnp.zeros((E,), pd),
+        "x_proj": layers.dense_init(ks[2], (E, R + 2 * N), pd),
+        "dt_proj_w": layers.dense_init(ks[3], (R, E), pd, scale=R ** -0.5),
+        "dt_proj_b": jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(ks[4], (E,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1)))
+        )).astype(pd),
+        "a_log": a_log.astype(jnp.float32),
+        "d_skip": jnp.ones((E,), jnp.float32),
+        "out_proj": layers.dense_init(ks[5], (E, D), pd),
+    }
+
+
+MAMBA_AXES = {
+    "in_proj": ("embed", "ssm_inner"),
+    "conv_w": ("conv_kernel", "ssm_inner"),
+    "conv_b": ("ssm_inner",),
+    "x_proj": ("ssm_inner", None),
+    "dt_proj_w": (None, "ssm_inner"),
+    "dt_proj_b": ("ssm_inner",),
+    "a_log": ("ssm_inner", "ssm_state"),
+    "d_skip": ("ssm_inner",),
+    "out_proj": ("ssm_inner", "embed"),
+}
+
+
+def _mamba_gates(params, xc, cfg):
+    """xc: (B, E) post-conv activations -> (dt, Bmat, Cmat) for one step."""
+    N = cfg.ssm_state_dim
+    R = cfg.dt_rank_actual
+    proj = jnp.einsum("be,er->br", xc, params["x_proj"].astype(xc.dtype))
+    dt_r, Bm, Cm = proj[:, :R], proj[:, R:R + N], proj[:, R + N:]
+    dt = jax.nn.softplus(
+        jnp.einsum("br,re->be", dt_r, params["dt_proj_w"].astype(xc.dtype)).astype(jnp.float32)
+        + params["dt_proj_b"].astype(jnp.float32)
+    )  # (B, E)
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _mamba_step(params, h, xc, cfg):
+    """h: (B, E, N) f32 state; xc: (B, E) conv-activated input."""
+    A = -jnp.exp(params["a_log"])  # (E, N)
+    dt, Bm, Cm = _mamba_gates(params, xc, cfg)
+    dA = jnp.exp(dt[..., None] * A[None])                       # (B, E, N)
+    dBx = dt[..., None] * Bm[:, None, :] * xc.astype(jnp.float32)[..., None]
+    h = h * dA + dBx
+    y = jnp.einsum("ben,bn->be", h, Cm) + params["d_skip"] * xc.astype(jnp.float32)
+    return h, y
+
+
+def mamba_forward(params, x, cfg: ModelConfig, rules: LogicalRules):
+    state, y = _mamba_scan(params, x, cfg, rules)
+    return y
+
+
+def _mamba_scan(params, x, cfg: ModelConfig, rules: LogicalRules):
+    B, S, D = x.shape
+    E, N, K = cfg.ssm_inner, cfg.ssm_state_dim, cfg.conv_kernel
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xz = with_logical_constraint(xz, rules, ("batch", "seq", "ssm_inner"))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # depthwise causal conv over time
+    xpad = jnp.pad(xi, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(
+        xpad[:, i : i + S] * params["conv_w"][i].astype(x.dtype) for i in range(K)
+    ) + params["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(conv)  # (B, S, E)
+
+    h0 = jnp.zeros((B, E, N), jnp.float32)
+
+    def step(h, xt):
+        h, y = _mamba_step(params, h, xt, cfg)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.swapaxes(xc, 0, 1))  # ys: (S, B, E)
+    y = jnp.swapaxes(ys, 0, 1).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    out = with_logical_constraint(out, rules, ("batch", "seq", "embed_act"))
+    # final conv state = last K-1 raw (pre-conv) inner activations
+    conv_state = xpad[:, -(K - 1):]
+    return {"h": h, "conv": conv_state}, out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> dict:
+    E, N, K = cfg.ssm_inner, cfg.ssm_state_dim, cfg.conv_kernel
+    return {
+        "h": jnp.zeros((batch, E, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, E), layers.dtype_of(cfg)),
+    }
+
+
+MAMBA_STATE_AXES = {
+    "h": ("batch", "ssm_inner", "ssm_state"),
+    "conv": ("batch", None, "ssm_inner"),
+}
+
+
+def mamba_decode(params, state, x, cfg: ModelConfig):
+    """x: (B, 1, D)."""
+    B = x.shape[0]
+    K = cfg.conv_kernel
+    xz = jnp.einsum("bsd,de->bse", x[:, 0:1], params["in_proj"].astype(x.dtype))[:, 0]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, E)
+    hist = jnp.concatenate([state["conv"], xi[:, None]], axis=1)  # (B, K, E)
+    conv = jnp.einsum("bke,ke->be", hist, params["conv_w"].astype(x.dtype)) + params["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(conv)
+    h, y = _mamba_step(params, state["h"], xc, cfg)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"].astype(x.dtype))
+    return {"h": h, "conv": hist[:, 1:]}, out[:, None]
+
+
+def mamba_fill_state(params, x, cfg: ModelConfig, rules: LogicalRules):
+    return _mamba_scan(params, x, cfg, rules)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell)
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig):
+    inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    H = cfg.num_heads
+    hd = inner // H
+    return inner, H, hd
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    pd = layers.param_dtype_of(cfg)
+    D = cfg.d_model
+    inner, H, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": layers.dense_init(ks[0], (D, 2 * inner), pd),
+        "wq": layers.dense_init(ks[1], (inner, H, hd), pd),
+        "wk": layers.dense_init(ks[2], (inner, H, hd), pd),
+        "wv": layers.dense_init(ks[3], (inner, H, hd), pd),
+        "w_if": layers.dense_init(ks[4], (inner, 2 * H), pd, scale=0.02),
+        "b_if": jnp.concatenate(  # forget-gate bias init high (keep memory)
+            [jnp.zeros((H,), jnp.float32), jnp.full((H,), 3.0, jnp.float32)]
+        ).astype(pd),
+        "gn_scale": jnp.ones((H, hd), pd),
+        "down_proj": layers.dense_init(ks[5], (inner, D), pd),
+    }
+
+
+MLSTM_AXES = {
+    "up_proj": ("embed", "ssm_inner"),
+    "wq": ("ssm_inner", "heads", "head_dim"),
+    "wk": ("ssm_inner", "heads", "head_dim"),
+    "wv": ("ssm_inner", "heads", "head_dim"),
+    "w_if": ("ssm_inner", "heads"),
+    "b_if": ("heads",),
+    "gn_scale": ("heads", "head_dim"),
+    "down_proj": ("ssm_inner", "embed"),
+}
+
+
+def _mlstm_step(state, qkvif, eps=1e-6):
+    """One mLSTM cell step with exponential-gate stabilization.
+
+    state: C (B,H,hd,hd), n (B,H,hd), m (B,H)
+    qkvif: q,k,v (B,H,hd); i_pre,f_pre (B,H)
+    """
+    C, n, m = state
+    q, k, v, i_pre, f_pre = qkvif
+    log_f = -jax.nn.softplus(-f_pre)     # log sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = f_g[..., None] * n + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new)) + eps
+    h = jnp.einsum("bhvk,bhk->bhv", C, q) / denom[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_qkvif(params, xs, cfg):
+    """xs: (B, S, inner) -> per-step tensors, all f32."""
+    inner, H, hd = _mlstm_dims(cfg)
+    scale = hd ** -0.5
+    q = jnp.einsum("bsi,ihd->bshd", xs, params["wq"].astype(xs.dtype)).astype(jnp.float32)
+    k = jnp.einsum("bsi,ihd->bshd", xs, params["wk"].astype(xs.dtype)).astype(jnp.float32) * scale
+    v = jnp.einsum("bsi,ihd->bshd", xs, params["wv"].astype(xs.dtype)).astype(jnp.float32)
+    gates = jnp.einsum("bsi,ih->bsh", xs, params["w_if"].astype(xs.dtype)).astype(jnp.float32)
+    gates = gates + params["b_if"].astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)
+    return q, k, v, i_pre, f_pre
+
+
+def _mlstm_groupnorm(params, h, eps=1e-5):
+    """Per-head RMS norm of the cell output. h: (..., H, hd)."""
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    return h * jax.lax.rsqrt(var + eps) * params["gn_scale"].astype(h.dtype)
+
+
+def _mlstm_scan(params, x, cfg: ModelConfig, rules: LogicalRules):
+    B, S, D = x.shape
+    inner, H, hd = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,di->bsi", x, params["up_proj"].astype(x.dtype))
+    up = with_logical_constraint(up, rules, ("batch", "seq", "ssm_inner"))
+    xs, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, xs, cfg)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+
+    def step(state, per_t):
+        state, h = _mlstm_step(state, per_t)
+        return state, h
+
+    xs_t = tuple(jnp.swapaxes(t, 0, 1) for t in (q, k, v, i_pre, f_pre))
+    state, hs = jax.lax.scan(step, (C0, n0, m0), xs_t)  # hs: (S, B, H, hd)
+    h = jnp.swapaxes(hs, 0, 1)
+    h = _mlstm_groupnorm(params, h).reshape(B, S, inner).astype(x.dtype)
+    y = h * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["down_proj"].astype(x.dtype))
+    out = with_logical_constraint(out, rules, ("batch", "seq", "embed_act"))
+    return {"C": state[0], "n": state[1], "m": state[2]}, out
+
+
+def mlstm_forward(params, x, cfg, rules):
+    return _mlstm_scan(params, x, cfg, rules)[1]
+
+
+def mlstm_fill_state(params, x, cfg, rules):
+    return _mlstm_scan(params, x, cfg, rules)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    inner, H, hd = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+MLSTM_STATE_AXES = {
+    "C": ("batch", "heads", "head_dim", None),
+    "n": ("batch", "heads", "head_dim"),
+    "m": ("batch", "heads"),
+}
+
+
+def mlstm_decode(params, state, x, cfg: ModelConfig):
+    B = x.shape[0]
+    inner, H, hd = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,di->bsi", x, params["up_proj"].astype(x.dtype))
+    xs, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, xs, cfg)
+    st = (state["C"], state["n"], state["m"])
+    st, h = _mlstm_step(st, tuple(t[:, 0] for t in (q, k, v, i_pre, f_pre)))
+    h = _mlstm_groupnorm(params, h).reshape(B, 1, inner).astype(x.dtype)
+    y = h * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["down_proj"].astype(x.dtype))
+    return {"C": st[0], "n": st[1], "m": st[2]}, out
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory cell with exponential gating)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    pd = layers.param_dtype_of(cfg)
+    D, H = cfg.d_model, cfg.num_heads
+    hd = D // H
+    ks = jax.random.split(key, 6)
+    F = cfg.slstm_ffn_dim
+    return {
+        # input projections for z,i,f,o gates
+        "w_x": layers.dense_init(ks[0], (D, 4, H, hd), pd),
+        # block-diagonal (per-head) recurrent projections
+        "w_h": layers.dense_init(ks[1], (4, H, hd, hd), pd, scale=hd ** -0.5),
+        "bias": jnp.zeros((4, H, hd), pd),
+        "gn_scale": jnp.ones((H, hd), pd),
+        # post-cell gated FFN (factor 4/3)
+        "ffn_in": layers.dense_init(ks[2], (D, 2 * F), pd),
+        "ffn_out": layers.dense_init(ks[3], (F, D), pd),
+    }
+
+
+SLSTM_AXES = {
+    "w_x": ("embed", None, "heads", "head_dim"),
+    # second head_dim stays unsharded: a PartitionSpec may not repeat a mesh axis
+    "w_h": (None, "heads", "head_dim", None),
+    "bias": (None, "heads", "head_dim"),
+    "gn_scale": ("heads", "head_dim"),
+    "ffn_in": ("embed", "mlp"),
+    "ffn_out": ("mlp", "embed"),
+}
+
+
+def _slstm_step(params, state, x_t):
+    """state: c,n,m,h each (B,H,hd); x_t: (B, 4, H, hd) pre-projected."""
+    c, n, m, h_prev = state
+    rec = jnp.einsum("bhd,ghde->bghe", h_prev, params["w_h"].astype(jnp.float32))
+    pre = x_t.astype(jnp.float32) + rec + params["bias"].astype(jnp.float32)
+    z_pre, i_pre, f_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def _slstm_apply(params, x, cfg: ModelConfig, rules: LogicalRules, state=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    hd = D // H
+    xp = jnp.einsum("bsd,dghe->bsghe", x, params["w_x"].astype(x.dtype))  # (B,S,4,H,hd)
+    if state is None:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        state = (zeros, zeros, jnp.full((B, H, hd), -1e30, jnp.float32), zeros)
+
+    def step(st, xt):
+        return _slstm_step(params, st, xt)
+
+    state, hs = jax.lax.scan(step, state, jnp.swapaxes(xp, 0, 1))
+    h = jnp.swapaxes(hs, 0, 1)  # (B, S, H, hd)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + 1e-5) * params["gn_scale"].astype(jnp.float32)
+    y = h.reshape(B, S, D).astype(x.dtype)
+    # gated FFN
+    ff = jnp.einsum("bsd,df->bsf", y, params["ffn_in"].astype(x.dtype))
+    a, g = jnp.split(ff, 2, axis=-1)
+    ff = a * jax.nn.sigmoid(g)  # GeGLU-style gate
+    out = jnp.einsum("bsf,fd->bsd", ff, params["ffn_out"].astype(x.dtype))
+    out = with_logical_constraint(out, rules, ("batch", "seq", "embed_act"))
+    return state, out
+
+
+def slstm_forward(params, x, cfg, rules):
+    return _slstm_apply(params, x, cfg, rules)[1]
+
+
+def slstm_fill_state(params, x, cfg, rules):
+    state, y = _slstm_apply(params, x, cfg, rules)
+    return {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}, y
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    zeros = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": zeros, "n": zeros, "m": jnp.full((batch, H, hd), -1e30, jnp.float32), "h": zeros}
+
+
+SLSTM_STATE_AXES = {
+    "c": ("batch", "heads", "head_dim"),
+    "n": ("batch", "heads", "head_dim"),
+    "m": ("batch", "heads", "head_dim"),
+    "h": ("batch", "heads", "head_dim"),
+}
+
+
+def slstm_decode(params, state, x, cfg: ModelConfig):
+    st = (state["c"], state["n"], state["m"], state["h"])
+    B, S, D = x.shape
+    xp = jnp.einsum("bsd,dghe->bsghe", x, params["w_x"].astype(x.dtype))
+    st, h = _slstm_step(params, st, xp[:, 0])
+    H = cfg.num_heads
+    hd = D // H
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + 1e-5) * params["gn_scale"].astype(jnp.float32)
+    y = h.reshape(B, 1, D).astype(x.dtype)
+    ff = jnp.einsum("bsd,df->bsf", y, params["ffn_in"].astype(x.dtype))
+    a, g = jnp.split(ff, 2, axis=-1)
+    ff = a * jax.nn.sigmoid(g)
+    out = jnp.einsum("bsf,fd->bsd", ff, params["ffn_out"].astype(x.dtype))
+    return {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}, out

@@ -1,0 +1,4 @@
+from repro.optim.sgd import sgd, sgd_momentum
+from repro.optim.adamw import adamw
+from repro.optim.schedule import constant_lr, exponential_decay, cosine_decay, warmup_cosine
+from repro.optim.base import Optimizer, apply_updates, clip_by_global_norm

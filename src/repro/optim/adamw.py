@@ -1,0 +1,38 @@
+"""AdamW with f32 moments (used by the LM pretrain example)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "t": jnp.int32(0),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            step = m_ / bc1 / (jnp.sqrt(v_ / bc2) + eps)
+            return -lr * (step + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)

@@ -1,0 +1,32 @@
+"""Hand-rolled pytree optimizers (optax-style (init, update) pairs).
+
+An ``Optimizer`` is a NamedTuple of two functions:
+  init(params) -> state
+  update(grads, state, params, lr) -> (updates, state)
+``updates`` are ADDED to params (sign convention: update = -lr * direction).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import tree as tu
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tu.tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return tu.tree_scale(grads, scale), norm

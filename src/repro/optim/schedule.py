@@ -1,0 +1,29 @@
+"""Learning-rate schedules (callables step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def exponential_decay(lr: float, decay: float = 0.999):
+    """The paper's per-round decay: lr * decay^round."""
+    return lambda step: jnp.float32(lr) * jnp.power(jnp.float32(decay), step)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        p = jnp.clip(step / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * p))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+    def fn(step):
+        w = jnp.clip(step / jnp.maximum(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, jnp.float32(lr) * w, cos(step - warmup))
+    return fn

@@ -1,0 +1,36 @@
+"""SGD and SGD+momentum (the paper's client optimizer is plain SGD)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        updates = jax.tree_util.tree_map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return updates, state
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        state = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: -(lr * (beta * m + g.astype(jnp.float32))), state, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, state)
+        return upd, state
+
+    return Optimizer(init, update)

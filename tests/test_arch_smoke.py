@@ -1,0 +1,166 @@
+"""Per-assigned-architecture smoke tests (reduced variants, CPU).
+
+Each of the 10 architectures instantiates its reduced config (<=2
+superblocks, d_model<=256, <=4 experts) and runs one forward + one train
+step asserting output shapes and no NaNs. Decode-capable archs also check
+prefill+decode consistency against the full forward.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.sharding import SINGLE_DEVICE_RULES as R
+from repro.configs import ASSIGNED, get_config
+from repro.models import model as M
+
+ARCHS = list(ASSIGNED)
+
+
+def _batch(cfg, key, B=2, S=24):
+    if cfg.frontend == "audio":
+        return {
+            "features": jax.random.normal(key, (B, S, cfg.d_model), jnp.float32),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        }, S
+    if cfg.frontend == "vision":
+        P = cfg.num_prefix_tokens
+        return {
+            "tokens": jax.random.randint(key, (B, S - P), 0, cfg.vocab_size),
+            "patches": jax.random.normal(key, (B, P, cfg.d_model), jnp.float32),
+            "labels": jax.random.randint(key, (B, S - P), 0, cfg.vocab_size),
+        }, S
+    return {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }, S
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 256 and cfg.num_experts <= 4
+    assert cfg.num_layers <= 2 * max(len(cfg.block_pattern), 1)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    batch, S = _batch(cfg, key)
+    loss = M.loss_fn(params, batch, cfg, R)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+
+    grads = jax.grad(lambda p: M.loss_fn(p, batch, cfg, R))(params)
+    gleaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in gleaves), arch
+    # one SGD step moves the loss
+    new = jax.tree_util.tree_map(lambda p, g: p - 0.1 * g.astype(p.dtype), params, grads)
+    loss2 = M.loss_fn(new, batch, cfg, R)
+    assert np.isfinite(float(loss2))
+    assert float(loss2) < float(loss), f"{arch}: step did not reduce loss"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_output_shapes(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(key, cfg)
+    batch, S = _batch(cfg, key)
+    if cfg.is_encoder_only:
+        logits = M.encode(params, batch, cfg, R)
+    else:
+        logits = M.forward_logits(params, batch, cfg, R)
+    # logits carry the padded vocab width; pad columns are masked to -inf
+    assert logits.shape == (2, S, cfg.vocab_padded)
+    assert int(jnp.argmax(logits, -1).max()) < cfg.vocab_size
+    real = np.asarray(logits[..., :cfg.vocab_size], np.float32)
+    assert np.isfinite(real).all()
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if a != "hubert-xlarge"])
+def test_smoke_prefill_decode_consistency(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(key, cfg)
+    B, S = 2, 16
+    P = cfg.num_prefix_tokens if cfg.frontend == "vision" else 0
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(key, (B, P, cfg.d_model), jnp.float32)
+    cache, logits_pre = M.prefill(params, batch, cfg, R, max_len=S + P + 4)
+    full = M.forward_logits(params, batch, cfg, R)
+    np.testing.assert_allclose(np.asarray(logits_pre), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    cache2, logits_dec = M.decode_step(params, cache, toks[:, S:S + 1],
+                                       jnp.int32(S + P), cfg, R)
+    batch2 = dict(batch)
+    batch2["tokens"] = toks
+    full2 = M.forward_logits(params, batch2, cfg, R)
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]), np.asarray(full2[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_decode_matches_windowed_forward():
+    """long_500k path: ring-buffer decode == windowed full attention."""
+    cfg = dataclasses.replace(get_config("phi4-mini-3.8b").reduced(),
+                              sliding_window=8)
+    key = jax.random.PRNGKey(3)
+    params = M.init_params(key, cfg)
+    B, S = 1, 24
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    cache, _ = M.prefill(params, {"tokens": toks[:, :S]}, cfg, R)
+    assert cache["p0"]["k"].shape[2] == 8  # (layers, B, C=window, ...)
+    _, logits_dec = M.decode_step(params, cache, toks[:, S:S + 1], jnp.int32(S), cfg, R)
+    full = M.forward_logits(params, {"tokens": toks}, cfg, R)
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_hubert_has_no_decode():
+    cfg = get_config("hubert-xlarge")
+    assert cfg.is_encoder_only
+    with pytest.raises(AssertionError):
+        M.init_cache(cfg.reduced(), 1, 8)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_exact_assigned_dimensions(arch):
+    """The FULL configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    expect = {
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect
+
+
+def test_moe_expert_counts():
+    q = get_config("qwen2-moe-a2.7b")
+    assert (q.num_experts, q.top_k, q.num_shared_experts) == (60, 4, 4)
+    a = get_config("arctic-480b")
+    assert (a.num_experts, a.top_k) == (128, 2)
+    j = get_config("jamba-v0.1-52b")
+    assert (j.num_experts, j.top_k) == (16, 2)
+
+
+def test_param_counts_scale():
+    """eval_shape-based counting puts each arch in its advertised ballpark."""
+    total, active = M.count_params(get_config("llama3-405b"))
+    assert 3.7e11 < total < 4.4e11, total
+    total, active = M.count_params(get_config("phi4-mini-3.8b"))
+    assert 3.0e9 < total < 4.6e9, total
+    total, active = M.count_params(get_config("qwen2-moe-a2.7b"))
+    assert active < total  # MoE discount
+    assert 1.0e10 < total < 2.0e10, total
+    assert 2.0e9 < active < 4.5e9, active

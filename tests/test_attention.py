@@ -1,0 +1,91 @@
+"""Chunked online-softmax attention vs a naive full-score-matrix oracle."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import chunked_attention, decode_attention
+
+
+def naive_attention(q, k, v, *, causal, window=None, kv_valid=None):
+    B, Sq, H, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, hd).astype(np.float32)
+    s = np.einsum("bqhgd,bkhd->bhgqk", qr, np.asarray(k, np.float32))
+    s /= math.sqrt(hd)
+    qpos = np.arange(Sq)[:, None]
+    kpos = np.arange(Sk)[None, :]
+    mask = np.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > (qpos - window)
+    s = np.where(mask[None, None, None], s, -1e30)
+    if kv_valid is not None:
+        vm = kpos[0][None, :] < np.asarray(kv_valid)[:, None]
+        s = np.where(vm[:, None, None, None, :], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    out = np.einsum("bhgqk,bkhd->bhgqd", p, np.asarray(v, np.float32))
+    return np.transpose(out, (0, 3, 1, 2, 4)).reshape(B, Sq, H, hd)
+
+
+@pytest.mark.parametrize("Sq,Sk,H,Hkv,hd,causal,window", [
+    (16, 16, 4, 2, 8, True, None),
+    (16, 16, 4, 4, 8, False, None),
+    (33, 33, 2, 1, 16, True, None),       # non-multiple of chunk
+    (64, 64, 4, 2, 8, True, 16),          # sliding window
+    (17, 17, 2, 2, 4, False, 8),
+])
+def test_chunked_vs_naive(Sq, Sk, H, Hkv, hd, causal, window):
+    key = jax.random.PRNGKey(0)
+    B = 2
+    q = jax.random.normal(key, (B, Sq, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Sk, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Sk, Hkv, hd))
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=8, kv_chunk=8)
+    want = naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+def test_chunk_size_invariance():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 40, 4, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 40, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 40, 2, 8))
+    outs = [chunked_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=kc)
+            for qc, kc in [(8, 8), (16, 4), (40, 40), (5, 13)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_matches_naive():
+    key = jax.random.PRNGKey(4)
+    B, C, Hkv, hd, H = 3, 12, 2, 8, 4
+    q = jax.random.normal(key, (B, 1, H, hd))
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (B, C, Hkv, hd))
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (B, C, Hkv, hd))
+    valid = jnp.asarray([5, 12, 1])
+    out = decode_attention(q, kc, vc, valid)
+    want = naive_attention(q, kc, vc, causal=False, kv_valid=valid)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_ring_permutation_invariance():
+    """Softmax over the valid cache is order-invariant: rolling the (full)
+    ring buffer must not change the output."""
+    key = jax.random.PRNGKey(5)
+    B, C, Hkv, hd, H = 1, 8, 2, 4, 4
+    q = jax.random.normal(key, (B, 1, H, hd))
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (B, C, Hkv, hd))
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (B, C, Hkv, hd))
+    out1 = decode_attention(q, kc, vc, jnp.int32(C))
+    out2 = decode_attention(q, jnp.roll(kc, 3, axis=1), jnp.roll(vc, 3, axis=1),
+                            jnp.int32(C))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)

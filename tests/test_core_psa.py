@@ -1,0 +1,172 @@
+"""FedPSA core math vs the paper's equations (Eq. 3-20)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PSAConfig, aggregate_buffer, cosine, dense_projection,
+                        fisher_diagonal, init_state, init_thermometer,
+                        is_full, psa_weights, push, sensitivity,
+                        sensitivity_from_parts, server_aggregate,
+                        server_receive, sketch_tree, staleness_polynomial,
+                        temperature, uniform_weights)
+from repro.core import psa as psa_lib
+from repro.common import tree as tu
+
+
+def _quad_loss(params, batch):
+    """loss = 0.5 * sum((x @ w - y)^2) / B — analytic grads & Fisher."""
+    pred = batch["x"] @ params["w"]
+    return 0.5 * jnp.mean(jnp.sum(jnp.square(pred - batch["y"]), -1))
+
+
+def test_sensitivity_matches_manual_eq8():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (4, 3))
+    params = {"w": w}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (8, 4))
+    y = jax.random.normal(jax.random.fold_in(key, 2), (8, 3))
+    batch = {"x": x, "y": y}
+    s = sensitivity(_quad_loss, params, batch, num_micro=4)["w"]
+
+    g = jax.grad(_quad_loss)(params, batch)["w"]
+    # empirical Fisher: mean over the 4 microbatches of squared microbatch grads
+    fs = []
+    for i in range(4):
+        mb = {"x": x[2 * i:2 * i + 2], "y": y[2 * i:2 * i + 2]}
+        fs.append(jnp.square(jax.grad(_quad_loss)(params, mb)["w"]))
+    F = sum(fs) / 4
+    want = jnp.abs(g * w - 0.5 * F * jnp.square(w))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_sensitivity_second_order_approximates_zeroing():
+    """Eq. 3 ground truth: |F(theta) - F(theta - theta_i e_i)| vs Eq. 8,
+    on a quadratic loss where the 2nd-order Taylor expansion is EXACT in the
+    Hessian — the Fisher approximation is the only error source."""
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (3, 2)) * 0.5
+    params = {"w": w}
+    x = jax.random.normal(jax.random.fold_in(key, 1), (64, 3))
+    y = x @ jax.random.normal(jax.random.fold_in(key, 2), (3, 2))
+    batch = {"x": x, "y": y}
+    s = np.asarray(sensitivity(_quad_loss, params, batch, num_micro=4)["w"])
+
+    base = float(_quad_loss(params, batch))
+    true = np.zeros_like(s)
+    for i in range(3):
+        for j in range(2):
+            wz = np.asarray(w).copy()
+            wz[i, j] = 0.0
+            true[i, j] = abs(base - float(_quad_loss({"w": jnp.asarray(wz)}, batch)))
+    # rank correlation: the approximation must order parameters like the truth
+    def rank(a):
+        order = np.argsort(a.ravel())
+        r = np.empty_like(order)
+        r[order] = np.arange(len(order))
+        return r
+    rs, rt = rank(s), rank(true)
+    corr = np.corrcoef(rs, rt)[0, 1]
+    assert corr > 0.8, f"rank corr {corr}"
+
+
+def test_sketch_equals_dense_projection():
+    key = jax.random.PRNGKey(2)
+    tree = {"a": jax.random.normal(key, (9, 5)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (7,))}
+    for k in (4, 16, 64):
+        y = sketch_tree(tree, seed=11, k=k)
+        R = dense_projection(11, [l.shape for l in jax.tree_util.tree_leaves(tree)], k)
+        flat = np.concatenate([np.asarray(l).ravel() for l in jax.tree_util.tree_leaves(tree)])
+        np.testing.assert_allclose(np.asarray(y), R @ flat, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_cosine_bounds(seed):
+    rng = np.random.RandomState(seed % 100000)
+    a = jnp.asarray(rng.randn(16).astype(np.float32))
+    b = jnp.asarray(rng.randn(16).astype(np.float32))
+    c = float(cosine(a, b))
+    assert -1.0001 <= c <= 1.0001
+    assert abs(float(cosine(a, a)) - 1.0) < 1e-5
+
+
+def test_jl_cosine_preservation():
+    """JL (Eq. 14-15): sketch cosine approximates full cosine."""
+    rng = np.random.RandomState(0)
+    d, k = 4096, 128
+    errs = []
+    for t in range(10):
+        a = rng.randn(d).astype(np.float32)
+        b = (0.6 * a + 0.4 * rng.randn(d)).astype(np.float32)
+        sa = sketch_tree({"x": jnp.asarray(a)}, seed=t, k=k)
+        sb = sketch_tree({"x": jnp.asarray(b)}, seed=t, k=k)
+        full = float(np.dot(a, b) / np.linalg.norm(a) / np.linalg.norm(b))
+        errs.append(abs(full - float(cosine(sa, sb))))
+    assert np.mean(errs) < 0.08, errs
+
+
+def test_thermometer_eq16_18():
+    st_ = init_thermometer(4)
+    assert not bool(is_full(st_))
+    for m in (4.0, 4.0, 4.0, 4.0):
+        st_ = push(st_, m)
+    assert bool(is_full(st_))
+    assert float(st_.m0) == 4.0
+    # Temp = (M_cur/M_0)*gamma + delta
+    assert abs(float(temperature(st_, 5.0, 0.5)) - 5.5) < 1e-6
+    for m in (1.0, 1.0, 1.0, 1.0):  # ring overwrites, M_cur = 1
+        st_ = push(st_, m)
+    assert abs(float(temperature(st_, 5.0, 0.5)) - (0.25 * 5 + 0.5)) < 1e-6
+
+
+@given(st.lists(st.floats(-1, 1, width=32), min_size=2, max_size=8),
+       st.floats(0.125, 20.0, width=32))
+@settings(max_examples=50, deadline=None)
+def test_psa_weights_simplex(kappas, temp):
+    w = np.asarray(psa_weights(jnp.asarray(kappas, jnp.float32), jnp.float32(temp)))
+    assert abs(w.sum() - 1.0) < 1e-4
+    assert (w >= 0).all()
+    # monotone: higher kappa never gets lower weight
+    order = np.argsort(kappas)
+    assert (np.diff(w[order]) >= -1e-6).all()
+
+
+def test_temperature_sharpens_weights():
+    k = jnp.asarray([0.9, 0.1, -0.5])
+    w_hot = np.asarray(psa_weights(k, jnp.float32(10.0)))
+    w_cold = np.asarray(psa_weights(k, jnp.float32(0.1)))
+    assert w_cold[0] > w_hot[0]          # cold focuses on the best update
+    assert w_cold[0] > 0.99
+    assert np.std(w_hot) < np.std(w_cold)
+
+
+def test_algorithm1_uniform_until_queue_full():
+    cfg = PSAConfig(buffer_size=2, queue_len=6)
+    state = init_state(cfg)
+    state.global_sketch = jnp.ones(cfg.sketch_k)
+    params = {"w": jnp.zeros((3,))}
+    infos = []
+    for i in range(6):  # 3 aggregations x buffer 2 = 6 receives = queue fills
+        upd = {"w": jnp.full((3,), 0.1 * (i + 1))}
+        sk = jnp.ones(cfg.sketch_k) * (1.0 if i % 2 == 0 else -1.0)
+        server_receive(state, upd, sk)
+        if len(state.buffer) >= cfg.buffer_size:
+            params, info = server_aggregate(state, params)
+            infos.append(info)
+    # first aggregations: queue not yet full -> uniform
+    np.testing.assert_allclose(np.asarray(infos[0]["weights"]), [0.5, 0.5], atol=1e-6)
+    assert infos[0]["temp"] is None
+    # last aggregation: queue full -> temperature softmax, kappa +1 vs -1
+    assert infos[-1]["temp"] is not None
+    w = np.asarray(infos[-1]["weights"])
+    assert w[0] > w[1]  # kappa=+1 entry outweighs kappa=-1
+
+
+def test_staleness_polynomial_decreasing():
+    taus = jnp.arange(0, 20)
+    w = np.asarray(staleness_polynomial(taus))
+    assert (np.diff(w) < 0).all()
+    assert abs(w[0] - 0.6) < 1e-6

@@ -1,0 +1,88 @@
+"""Data pipeline: partitioning, calibration batches, loaders."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (ClientDataset, batch_iterator, dirichlet_partition,
+                        iid_partition, make_calibration_batch,
+                        make_classification, make_lm_corpus, train_test_split)
+
+
+def test_partition_is_exact_cover():
+    ds = make_classification(2000, 10, 16, seed=1)
+    parts = dirichlet_partition(ds, 13, alpha=0.5, seed=2)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(ds)
+    assert len(np.unique(allidx)) == len(ds)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_partition_min_size(seed):
+    ds = make_classification(1000, 5, 8, seed=seed % 17)
+    parts = dirichlet_partition(ds, 10, alpha=0.1, seed=seed, min_size=2)
+    assert min(len(p) for p in parts) >= 2
+
+
+def test_heterogeneity_increases_as_alpha_decreases():
+    """Mean per-client label-distribution distance from uniform grows as
+    alpha shrinks — the Dirichlet protocol's defining property."""
+    ds = make_classification(20000, 10, 8, seed=3)
+
+    def skew(alpha):
+        parts = dirichlet_partition(ds, 20, alpha=alpha, seed=4)
+        ds_ = []
+        for p in parts:
+            hist = np.bincount(ds.y[p], minlength=10) / max(len(p), 1)
+            ds_.append(np.abs(hist - 0.1).sum())
+        return np.mean(ds_)
+
+    assert skew(0.1) > skew(1.0) > skew(100.0)
+
+
+def test_iid_partition_balanced():
+    ds = make_classification(1000, 10, 8, seed=5)
+    parts = iid_partition(ds, 7, seed=6)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_train_test_split_disjoint_fractions():
+    ds = make_classification(1000, 10, 8, seed=7)
+    tr, te = train_test_split(ds, 0.1, seed=8)
+    assert len(te) == 100 and len(tr) == 900
+
+
+def test_calibration_sources():
+    ds = make_classification(500, 10, 16, seed=9)
+    real = make_calibration_batch(ds, 32, "real")
+    gauss = make_calibration_batch(ds, 32, "gaussian")
+    assert real["x"].shape == gauss["x"].shape == (32, 16)
+    assert gauss["y"].max() < 10
+    # gaussian calibration must NOT be a subset of the data
+    assert not any((gauss["x"][0] == ds.x).all(axis=1).any() for _ in [0])
+
+
+def test_epoch_iterator_counts():
+    ds = make_classification(130, 5, 8, seed=10)
+    cd = ClientDataset(ds)
+    batches = list(cd.epochs(num_epochs=3, batch_size=64, seed=0))
+    assert len(batches) == 6  # floor(130/64)=2 per epoch x 3
+    assert all(b["x"].shape == (64, 8) for b in batches)
+
+
+def test_small_client_batch_clamps():
+    ds = make_classification(10, 5, 8, seed=11)
+    cd = ClientDataset(ds)
+    batches = list(cd.epochs(num_epochs=2, batch_size=64, seed=0))
+    assert len(batches) == 2 and batches[0]["x"].shape[0] == 10
+
+
+def test_lm_corpus_learnable_structure():
+    toks = make_lm_corpus(5000, vocab=64, seed=0, branching=4)
+    assert toks.min() >= 0 and toks.max() < 64
+    # each token has at most `branching` successors
+    succ = {}
+    for a, b in zip(toks[:-1], toks[1:]):
+        succ.setdefault(int(a), set()).add(int(b))
+    assert max(len(v) for v in succ.values()) <= 4

@@ -1,0 +1,89 @@
+"""Optimizers decrease convex losses; checkpoints roundtrip exactly."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (latest_step, load_pytree, load_train_state,
+                              save_pytree, save_train_state)
+from repro.optim import (adamw, apply_updates, clip_by_global_norm,
+                         constant_lr, cosine_decay, exponential_decay, sgd,
+                         sgd_momentum, warmup_cosine)
+
+
+def _quad(params):
+    return jnp.sum(jnp.square(params["w"] - 3.0)) + jnp.sum(jnp.square(params["b"]))
+
+
+def _run(opt, steps=200, lr=0.05):
+    params = {"w": jnp.ones((4,)), "b": jnp.full((2,), 2.0)}
+    state = opt.init(params)
+    for _ in range(steps):
+        g = jax.grad(_quad)(params)
+        upd, state = opt.update(g, state, params, lr)
+        params = apply_updates(params, upd)
+    return float(_quad(params))
+
+
+def test_sgd_converges():
+    assert _run(sgd()) < 1e-3
+
+
+def test_momentum_converges():
+    assert _run(sgd_momentum(0.9), lr=0.02) < 1e-3
+
+
+def test_nesterov_converges():
+    assert _run(sgd_momentum(0.9, nesterov=True), lr=0.02) < 1e-3
+
+
+def test_adamw_converges():
+    assert _run(adamw(), lr=0.05) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"w": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.sqrt(jnp.sum(jnp.square(clipped["w"])))) - 1.0) < 1e-5
+    assert float(norm) == 20.0
+    small = {"w": jnp.full((4,), 0.01)}
+    same, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(same["w"], small["w"], rtol=1e-6)
+
+
+def test_schedules():
+    assert float(constant_lr(0.1)(100)) == np.float32(0.1)
+    ed = exponential_decay(0.01, 0.999)
+    assert abs(float(ed(0)) - 0.01) < 1e-9
+    assert float(ed(100)) < 0.01
+    cd = cosine_decay(1.0, 100)
+    assert float(cd(0)) == 1.0 and abs(float(cd(100)) - 0.1) < 1e-5
+    wc = warmup_cosine(1.0, 10, 110)
+    assert float(wc(0)) == 0.0 and abs(float(wc(10)) - 1.0) < 1e-5
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "nested": {"b": np.ones(4, np.int32)},
+            "list": [np.zeros(2), np.full((1, 2), 7.0)]}
+    with tempfile.TemporaryDirectory() as d:
+        save_pytree(tree, d, step=3)
+        save_pytree(tree, d, step=10)
+        assert latest_step(d) == 10
+        back = load_pytree(d, tree, step=10)
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_train_state_roundtrip():
+    params = {"w": jnp.ones((3,))}
+    opt = adamw()
+    state = opt.init(params)
+    with tempfile.TemporaryDirectory() as d:
+        save_train_state(params, state, 42, d)
+        p2, s2, step = load_train_state(d, params, state)
+        assert step == 42
+        np.testing.assert_array_equal(np.asarray(p2["w"]), np.ones(3))

@@ -1,0 +1,142 @@
+"""Sharding-rule resolution: divisibility fallbacks across all 10 archs."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.common.sharding import LogicalRules, PRODUCTION_RULES
+from repro.configs import ASSIGNED, get_config
+from repro.configs.shapes import SHAPES, config_for_shape, shape_supported
+from repro.launch.mesh import axis_dims, rules_for
+from repro.models import model as M
+
+
+def _fake_mesh(shape, axes):
+    return SimpleNamespace(axis_names=axes,
+                           devices=SimpleNamespace(shape=shape))
+
+
+POD = _fake_mesh((16, 16), ("data", "model"))
+MULTIPOD = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _nshards(mesh, assign):
+    if assign is None:
+        return 1
+    axes = assign if isinstance(assign, (list, tuple)) else (assign,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in axes]))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("mesh", [POD, MULTIPOD], ids=["pod", "multipod"])
+def test_rules_respect_divisibility(arch, mesh):
+    cfg = get_config(arch)
+    rules = rules_for(cfg, mesh, 256)
+    dims = axis_dims(cfg, 256)
+    for name, sizes in dims.items():
+        assign = rules.rules.get(name)
+        ns = _nshards(mesh, assign)
+        for d in sizes:
+            assert d % ns == 0, (arch, name, d, assign)
+
+
+def test_head_dim_fallback_for_odd_head_counts():
+    # recurrent-only archs: head_dim TP fallback applies
+    rules = rules_for(get_config("xlstm-350m"), POD, 256)
+    assert rules.rules["heads"] is None
+    assert rules.rules["head_dim"] == "model"
+    # attention archs with indivisible heads: attention runs replicated over
+    # `model` (head_dim TP would all-reduce every f32 score block — §Perf)
+    for arch in ("phi4-mini-3.8b", "internvl2-1b", "arctic-480b"):
+        rules = rules_for(get_config(arch), POD, 256)
+        assert rules.rules["heads"] is None, arch
+        assert rules.rules["head_dim"] is None, arch
+    for arch in ("llama3-405b", "codeqwen1.5-7b", "minitron-8b"):
+        rules = rules_for(get_config(arch), POD, 256)
+        assert rules.rules["heads"] == "model", arch
+        assert rules.rules["head_dim"] is None, arch
+
+
+def test_qwen2_moe_expert_tensor_parallel():
+    cfg = get_config("qwen2-moe-a2.7b")
+    rules = rules_for(cfg, POD, 256)
+    assert rules.rules["expert"] is None        # 60 does not divide 16
+    assert rules.rules["expert_mlp"] == "model"  # 1408 = 16 * 88
+    arctic = rules_for(get_config("arctic-480b"), POD, 256)
+    assert arctic.rules["expert"] == "model"     # 128 = 16 * 8
+
+
+def test_batch_replicated_for_long500k():
+    cfg = get_config("jamba-v0.1-52b")
+    rules = rules_for(cfg, POD, 1)  # long_500k: global_batch=1
+    assert rules.rules["batch"] is None
+    rules256 = rules_for(cfg, POD, 256)
+    assert rules256.rules["batch"] == "data"
+
+
+def test_vocab_fallback_for_non_divisible():
+    assert rules_for(get_config("internvl2-1b"), POD, 256).rules["vocab"] is None
+    assert rules_for(get_config("hubert-xlarge"), POD, 256).rules["vocab"] is None
+    assert rules_for(get_config("llama3-405b"), POD, 256).rules["vocab"] == "model"
+
+
+def test_spec_dedup_first_wins():
+    rules = LogicalRules({"a": "model", "b": "model", "c": "data"})
+    spec = rules.mesh_axes(("a", "b", "c"))
+    assert spec == __import__("jax").sharding.PartitionSpec("model", None, "data")
+
+
+def test_pod_axis_dropped_on_single_pod_mesh():
+    cfg = get_config("llama3-405b")
+    rules = rules_for(cfg, POD, 256)
+    assert rules.rules["batch"] == "data"
+    rules_mp = rules_for(cfg, MULTIPOD, 256)
+    assert tuple(rules_mp.rules["batch"]) == ("pod", "data")
+
+
+def test_assignment_matrix_counts():
+    """10 archs x 4 shapes = 40; hubert decode shapes are the only skips."""
+    total, skipped = 0, []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for s in SHAPES:
+            total += 1
+            ok, why = shape_supported(cfg, s)
+            if not ok:
+                skipped.append((arch, s))
+    assert total == 40
+    assert sorted(skipped) == [("hubert-xlarge", "decode_32k"),
+                               ("hubert-xlarge", "long_500k")]
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_input_specs_wellformed(arch):
+    from repro.configs.shapes import input_specs
+    import jax
+    cfg = get_config(arch)
+    for s in SHAPES:
+        ok, _ = shape_supported(cfg, s)
+        if not ok:
+            continue
+        mode, specs, axes = input_specs(cfg, s)
+        flat_s = jax.tree_util.tree_leaves(specs)
+        assert all(isinstance(x, jax.ShapeDtypeStruct) for x in flat_s)
+        # axes tree matches specs tree structure
+        def is_ax(x):
+            return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+        flat_a = jax.tree_util.tree_leaves(axes, is_leaf=is_ax)
+        assert len(flat_a) == len(flat_s), (arch, s)
+        if mode == "train":
+            b = specs["batch"]
+            leading = jax.tree_util.tree_leaves(b)[0].shape[0]
+            assert leading == SHAPES[s].global_batch
+
+
+def test_long_context_variant_sets_window():
+    cfg = get_config("llama3-405b")
+    assert config_for_shape(cfg, "long_500k").sliding_window == 8192
+    assert config_for_shape(cfg, "train_4k").sliding_window is None
+    # ssm archs don't need a window
+    x = get_config("xlstm-350m")
+    assert config_for_shape(x, "long_500k").sliding_window is None

@@ -1,0 +1,115 @@
+"""Federated runtime behaviour: determinism, staleness, algorithm orderings.
+
+Two regimes: a QUICK world (20 clients, short horizon) for mechanical
+invariants, and the PAPER world (50 clients, 20% concurrency, Dirichlet 0.1,
+~half a virtual day) where learning-quality orderings are measurable.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PSAConfig
+from repro.data import (ClientDataset, dirichlet_partition,
+                        make_calibration_batch, make_classification,
+                        train_test_split)
+from repro.federated import SimConfig, run_algorithm
+from repro.models import model as M
+
+
+def _world(num_clients, alpha, seed=0):
+    cfg = get_config("paper-synthetic-mlp")
+    full = make_classification(10_000, 10, 32, seed=seed, class_sep=0.7)
+    train, test = train_test_split(full, 0.1)
+    parts = dirichlet_partition(train, num_clients, alpha=alpha, seed=seed)
+    clients = [ClientDataset(train.subset(ix)) for ix in parts]
+    calib = make_calibration_batch(train, 64, "gaussian")
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, clients, test, calib, params
+
+
+@pytest.fixture(scope="module")
+def quick():
+    return _world(20, 0.1) + (SimConfig(num_clients=20, horizon=12_000,
+                                        eval_every=6_000, seed=0),)
+
+
+@pytest.fixture(scope="module")
+def paper_world():
+    return _world(50, 0.1) + (SimConfig(num_clients=50, horizon=40_000,
+                                        eval_every=10_000, seed=0),)
+
+
+def test_determinism(quick):
+    cfg, clients, test, calib, params, sim = quick
+    r1 = run_algorithm("fedbuff", cfg, params, clients, test, sim)
+    r2 = run_algorithm("fedbuff", cfg, params, clients, test, sim)
+    assert r1.final_accuracy == r2.final_accuracy
+    assert r1.dispatches == r2.dispatches
+    assert r1.times == r2.times
+
+
+def test_staleness_is_positive_under_asynchrony(quick):
+    cfg, clients, test, calib, params, sim = quick
+    r = run_algorithm("fedasync", cfg, params, clients, test, sim)
+    taus = [e["tau"] for e in r.receive_log]
+    assert max(taus) > 0, "async run must observe stale updates"
+    assert r.versions == r.dispatches  # fedasync updates on every receipt
+
+
+def test_fedbuff_update_frequency(quick):
+    cfg, clients, test, calib, params, sim = quick
+    r = run_algorithm("fedbuff", cfg, params, clients, test, sim,
+                      server_kwargs={"buffer_size": 5})
+    assert r.versions == r.dispatches // 5
+
+
+def test_fedpsa_logs_algorithm1_internals(quick):
+    cfg, clients, test, calib, params, sim = quick
+    r = run_algorithm("fedpsa", cfg, params, clients, test, sim,
+                      psa_cfg=PSAConfig(queue_len=10), calib_batch=calib)
+    assert len(r.server_log) == r.versions
+    early = r.server_log[0]
+    np.testing.assert_allclose(early["weights"], 0.2, atol=1e-6)  # uniform
+    assert early["temp"] is None
+    late = r.server_log[-1]
+    assert late["temp"] is not None and late["temp"] > 0
+    assert abs(np.sum(late["weights"]) - 1) < 1e-4
+    assert np.all(np.asarray(late["kappas"]) <= 1.0 + 1e-5)
+
+
+def test_longtail_latency_supported(quick):
+    cfg, clients, test, calib, params, _ = quick
+    sim = SimConfig(num_clients=20, horizon=8_000, eval_every=4_000, seed=0,
+                    latency_kind="longtail", latency_lo=10, latency_hi=500)
+    r = run_algorithm("fedbuff", cfg, params, clients, test, sim)
+    assert r.dispatches > 0 and np.isfinite(r.final_accuracy)
+
+
+@pytest.mark.slow
+def test_all_algorithms_learn(paper_world):
+    cfg, clients, test, calib, params, sim = paper_world
+    for alg in ("fedpsa", "fedbuff", "fedasync", "fedavg", "ca2fl", "fedfa", "fedpac"):
+        r = run_algorithm(alg, cfg, params, clients, test, sim,
+                          psa_cfg=PSAConfig(), calib_batch=calib)
+        assert r.final_accuracy > 0.18, (alg, r.final_accuracy)
+
+
+@pytest.mark.slow
+def test_fedpsa_beats_fedasync_noniid(paper_world):
+    """The paper's central qualitative claim at alpha=0.1 (Table 2)."""
+    cfg, clients, test, calib, params, sim = paper_world
+    r_psa = run_algorithm("fedpsa", cfg, params, clients, test, sim,
+                          psa_cfg=PSAConfig(), calib_batch=calib)
+    r_async = run_algorithm("fedasync", cfg, params, clients, test, sim)
+    assert r_psa.final_accuracy > r_async.final_accuracy
+    r_buff = run_algorithm("fedbuff", cfg, params, clients, test, sim)
+    assert r_psa.final_accuracy > r_buff.final_accuracy
+
+
+def test_aulc_monotone_in_curve():
+    from repro.federated.simulator import SimResult
+    r = SimResult(times=[0, 43200, 86400], accuracies=[0.0, 0.5, 0.5])
+    assert 0 < r.aulc < 1
+    r2 = SimResult(times=[0, 43200, 86400], accuracies=[0.5, 0.75, 0.75])
+    assert r2.aulc > r.aulc

@@ -1,0 +1,101 @@
+"""End-to-end behaviour of the full FedPSA system (paper Algorithm 1 in the
+event-driven runtime, kernels in the loop, serving path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import tree as tu
+from repro.common.sharding import SINGLE_DEVICE_RULES as R
+from repro.configs import get_config
+from repro.core import PSAConfig, cosine
+from repro.data import (ClientDataset, dirichlet_partition,
+                        make_calibration_batch, make_classification,
+                        train_test_split)
+from repro.federated import SimConfig, run_algorithm, make_sketch_fn
+from repro.models import model as M
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    cfg = get_config("paper-synthetic-mlp")
+    full = make_classification(4000, 10, 32, seed=1, class_sep=0.7)
+    train, test = train_test_split(full, 0.1)
+    parts = dirichlet_partition(train, 10, alpha=0.3, seed=1)
+    clients = [ClientDataset(train.subset(ix)) for ix in parts]
+    calib = make_calibration_batch(train, 64, "gaussian")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    return cfg, clients, test, calib, params
+
+
+def test_fedpsa_end_to_end_improves_model(small_world):
+    cfg, clients, test, calib, params = small_world
+    sim = SimConfig(num_clients=10, horizon=30_000, eval_every=10_000, seed=1)
+    res = run_algorithm("fedpsa", cfg, params, clients, test, sim,
+                        psa_cfg=PSAConfig(), calib_batch=calib)
+    first = res.accuracies[0]
+    assert res.final_accuracy > max(first + 0.15, 0.3), res.accuracies
+    assert res.versions > 0
+
+
+def test_sketch_fn_detects_behavioral_divergence(small_world):
+    """A model trained hard on skewed data must have lower kappa vs the
+    global model than a lightly-perturbed copy of the global model — the
+    motivation experiment (paper Fig. 1/2) in miniature."""
+    cfg, clients, test, calib, params = small_world
+    sketch_fn = make_sketch_fn(cfg, calib, PSAConfig())
+    s_global = sketch_fn(params)
+
+    twin = jax.tree_util.tree_map(
+        lambda p: p + 0.001 * jax.random.normal(jax.random.PRNGKey(0), p.shape), params)
+    from repro.federated.client import local_update
+    _, diverged = local_update(params, cfg, clients[0], epochs=40,
+                               batch_size=64, lr=0.1, seed=0)
+    k_twin = float(cosine(sketch_fn(twin), s_global))
+    k_div = float(cosine(sketch_fn(diverged), s_global))
+    assert k_twin > k_div, (k_twin, k_div)
+
+
+def test_kernel_path_equals_core_path_in_system(small_world):
+    """The Pallas fused kernel is a drop-in for the client upload path."""
+    cfg, clients, test, calib, params = small_world
+    from repro.core.sensitivity import fisher_diagonal, sensitivity_from_parts
+    from repro.core import sketch as sk
+    from repro.kernels import ops
+
+    calib_j = {k: jnp.asarray(v) for k, v in calib.items()}
+    loss = lambda p, b: M.loss_fn(p, b, cfg, R)
+    g = jax.grad(loss)(params, calib_j)
+    f = fisher_diagonal(loss, params, calib_j, 4)
+    core_sketch = sk.sketch_tree(sensitivity_from_parts(params, g, f), seed=42, k=16)
+    kern_sketch = ops.sketch_tree_fused(params, g, f, seed=42, k=16)
+    np.testing.assert_allclose(np.asarray(core_sketch), np.asarray(kern_sketch),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_serve_path_generates():
+    cfg = get_config("xlstm-350m").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    B, S, G = 2, 8, 4
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    cache, logits = M.prefill(params, {"tokens": toks}, cfg, R, max_len=S + G)
+    out = []
+    cur = jnp.argmax(logits, -1)[:, None]
+    for i in range(G):
+        cache, lg = M.decode_step(params, cache, cur, jnp.int32(S + i), cfg, R)
+        cur = jnp.argmax(lg[:, 0], -1)[:, None]
+        out.append(cur)
+    gen = jnp.concatenate(out, 1)
+    assert gen.shape == (B, G)
+    assert int(gen.max()) < cfg.vocab_size
+
+
+def test_checkpoint_restores_federated_state(small_world, tmp_path):
+    cfg, clients, test, calib, params = small_world
+    from repro.checkpoint import save_pytree, load_pytree
+    sim = SimConfig(num_clients=10, horizon=5_000, eval_every=5_000, seed=2)
+    run_algorithm("fedbuff", cfg, params, clients, test, sim)
+    save_pytree(params, str(tmp_path), step=0)
+    back = load_pytree(str(tmp_path), params, step=0)
+    assert float(tu.tree_norm(tu.tree_sub(back, params))) == 0.0

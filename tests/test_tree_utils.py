@@ -1,0 +1,85 @@
+"""Pytree arithmetic: unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common import tree as tu
+
+
+def _tree(vals):
+    a, b, c = vals
+    return {"x": jnp.asarray(a), "y": {"z": jnp.asarray(b), "w": jnp.asarray(c)}}
+
+
+@st.composite
+def tree_pair(draw):
+    shape = draw(st.sampled_from([(3,), (2, 4), (1,), (5, 2)]))
+    def arr():
+        return draw(st.lists(st.floats(-100, 100, width=32),
+                             min_size=int(np.prod(shape)),
+                             max_size=int(np.prod(shape)))), shape
+    def mk():
+        vals = []
+        for _ in range(3):
+            v, s = arr()
+            vals.append(np.asarray(v, np.float32).reshape(s))
+        return _tree(vals)
+    return mk(), mk()
+
+
+@given(tree_pair())
+@settings(max_examples=25, deadline=None)
+def test_add_sub_roundtrip(pair):
+    a, b = pair
+    back = tu.tree_sub(tu.tree_add(a, b), b)
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(la, lb, rtol=1e-4, atol=1e-4)
+
+
+@given(tree_pair(), st.floats(-10, 10, width=32))
+@settings(max_examples=25, deadline=None)
+def test_axpy_matches_scale_add(pair, alpha):
+    x, y = pair
+    got = tu.tree_axpy(alpha, x, y)
+    want = tu.tree_add(tu.tree_scale(x, alpha), y)
+    for la, lb in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(la, lb, rtol=1e-4, atol=1e-4)
+
+
+@given(tree_pair())
+@settings(max_examples=25, deadline=None)
+def test_sq_norm_equals_self_dot(pair):
+    a, _ = pair
+    np.testing.assert_allclose(float(tu.tree_sq_norm(a)),
+                               float(tu.tree_dot(a, a)), rtol=1e-5)
+
+
+def test_weighted_sum_matches_manual():
+    key = jax.random.PRNGKey(0)
+    trees = [_tree([jax.random.normal(jax.random.fold_in(key, 3 * i + j), (4, 3))
+                    for j in range(3)]) for i in range(4)]
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+    got = tu.tree_weighted_sum(trees, w)
+    want = trees[0]
+    want = jax.tree_util.tree_map(lambda *ls: sum(float(w[i]) * ls[i] for i in range(4)), *trees)
+    for la, lb in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-6)
+
+
+def test_flatten_roundtrip():
+    t = _tree([np.arange(6, dtype=np.float32).reshape(2, 3),
+               np.ones(4, np.float32), np.zeros((2, 2), np.float32)])
+    vec, unflatten = tu.flatten_to_vector(t)
+    assert vec.shape == (tu.tree_size(t),)
+    back = unflatten(vec)
+    for la, lb in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(la, lb)
+
+
+def test_all_finite():
+    t = _tree([np.ones(3, np.float32)] * 3)
+    assert bool(tu.tree_all_finite(t))
+    t["x"] = jnp.asarray([1.0, np.nan, 2.0])
+    assert not bool(tu.tree_all_finite(t))
