@@ -1,0 +1,19 @@
+# Repo CI entry points. `make test` is the tier-1 gate from ROADMAP.md.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench-smoke bench
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+# Kernel + server-step microbenchmarks; writes artifacts/bench/*.json
+# including BENCH_server_step.json (legacy ingest vs fused jitted step).
+bench-smoke:
+	$(PY) -m benchmarks.kernel_micro
+
+bench:
+	$(PY) -m benchmarks.run

@@ -31,6 +31,71 @@ def _time(fn, *a, reps=5):
     return (time.time() - t0) / reps, out
 
 
+def bench_server_step(n_arrivals: int = 60):
+    """Legacy per-arrival FedPSA ingest (unjitted pytree ops, python-list
+    buffer) vs the fused jit-compiled policy step (flat stacked ring buffer,
+    Pallas buffer_agg, one device call per arrival) on the seed model
+    shapes. Writes artifacts/bench/BENCH_server_step.json."""
+    from repro.common import tree as tu
+    from repro.configs import get_config
+    from repro.core import PSAConfig
+    from repro.core import sketch as sketch_lib
+    from repro.federated import legacy, servers
+    from repro.models import model as model_lib
+
+    cfg = get_config("paper-synthetic-mlp")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    d = tu.tree_size(params)
+    psa = PSAConfig()
+    # raw-parameter sketch: both paths pay the same per-aggregation refresh
+    sketch_fn = jax.jit(
+        lambda p: sketch_lib.sketch_tree(p, psa.sketch_seed, psa.sketch_k))
+
+    rng = np.random.RandomState(0)
+    deltas = [jax.tree_util.tree_map(
+        lambda x: jnp.asarray(rng.randn(*x.shape) * 0.01, jnp.float32), params)
+        for _ in range(n_arrivals)]
+    sketches = [jnp.asarray(rng.randn(psa.sketch_k), jnp.float32)
+                for _ in range(n_arrivals)]
+    metas = [{"tau": i % 3, "client_id": i % 10, "data_size": 10.0,
+              "sketch": sketches[i]} for i in range(n_arrivals)]
+
+    def drive(server):
+        for delta, meta in zip(deltas, metas):
+            server.receive(delta, delta, meta)
+        jax.block_until_ready(jax.tree_util.tree_leaves(server.params))
+        return server
+
+    def timed(server):
+        drive(server)  # warmup pass: compile every jit in the path
+        t0 = time.time()
+        drive(server)  # steady-state pass (state carries over, same work)
+        return (time.time() - t0) / n_arrivals, server
+
+    t_legacy, srv_l = timed(legacy.make_legacy_server(
+        "fedpsa", params, psa_cfg=psa, sketch_fn=sketch_fn))
+    t_fused, srv_f = timed(servers.make_server(
+        "fedpsa", params, psa_cfg=psa, sketch_fn=sketch_fn))
+    # both paths must land on the same global model
+    diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(srv_l.params),
+        jax.tree_util.tree_leaves(srv_f.params)))
+    assert diff < 1e-4, f"legacy/fused trajectories diverged: {diff}"
+
+    rows = {
+        "model": cfg.name, "params_d": d, "arrivals": n_arrivals,
+        "buffer_size": psa.buffer_size,
+        "legacy_us_per_arrival": t_legacy * 1e6,
+        "fused_us_per_arrival": t_fused * 1e6,
+        "speedup_x": t_legacy / t_fused,
+        "max_param_diff": diff,
+    }
+    print(f"server_step,fedpsa,d={d},legacy_us={t_legacy*1e6:.0f},"
+          f"fused_us={t_fused*1e6:.0f},speedup={t_legacy/t_fused:.2f}x")
+    common.save("BENCH_server_step", rows)
+    return rows
+
+
 def main(argv=None):
     key = jax.random.PRNGKey(0)
     rows = {}
@@ -78,6 +143,7 @@ def main(argv=None):
                           "pallas_interpret_us": t_kern * 1e6}
     print(f"kernel,buffer_agg,L={L},d={d},jnp_us={t_ref*1e6:.0f},"
           f"pallas_interp_us={t_kern*1e6:.0f}")
+    rows["server_step"] = bench_server_step()
     common.save("kernel_micro", rows)
     return rows
 

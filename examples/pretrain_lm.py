@@ -20,8 +20,7 @@ import numpy as np
 
 from repro.common.sharding import SINGLE_DEVICE_RULES as R
 from repro.common import tree as tu
-from repro.core import (PSAConfig, client_sketch, init_state, buffer_full,
-                        server_aggregate, server_receive)
+from repro.core import PSAConfig, client_sketch, init_state, server_step
 from repro.data import make_lm_corpus
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -91,7 +90,6 @@ def main():
                 "labels": jnp.asarray(toks[:, 1:])}
 
     psa_cfg = PSAConfig(buffer_size=2, queue_len=10, sketch_k=16)
-    psa = init_state(psa_cfg)
     rng = np.random.RandomState(0)
     calib = sample_batch(corpus, rng)
 
@@ -99,12 +97,22 @@ def main():
     def sketch_of(p):
         return client_sketch(loss_fn, p, calib, psa_cfg)
 
-    psa.global_sketch = sketch_of(params)
+    # Functional server core: flat parameter vector + fused Algorithm-1 step
+    # (receive + conditional aggregate + global-sketch refresh, one jit call).
+    spec = tu.FlatSpec(params)
+    psa = init_state(psa_cfg, spec.size, sketch_of(params))
+    g_vec = spec.flatten(params)
+
+    @jax.jit
+    def fused_step(psa, g_vec, delta_vec, sketch_vec):
+        return server_step(psa, g_vec, delta_vec, sketch_vec, psa_cfg,
+                           lambda vec: sketch_of(spec.unflatten(vec)))
 
     t0 = time.time()
     losses = []
     step = 0
-    while psa_version(psa) < args.rounds:
+    version = 0
+    while version < args.rounds:
         cid = rng.randint(args.clients)
         p_local = params
         opt_state = opt.init(p_local)
@@ -114,15 +122,16 @@ def main():
                 p_local, opt_state, sample_batch(shards[cid], rng), lr)
             step += 1
         delta = tu.tree_sub(p_local, params)
-        server_receive(psa, delta, sketch_of(p_local))
+        psa, g_vec, info = fused_step(psa, g_vec, spec.flatten(delta),
+                                      sketch_of(p_local))
         losses.append(float(l))
-        if buffer_full(psa):
-            params, info = server_aggregate(psa, params)
-            psa.global_sketch = sketch_of(params)
-            v = psa_version(psa)
-            if v % 5 == 0 or v == args.rounds:
-                print(f"[pretrain] agg {v:4d} loss {np.mean(losses[-8:]):.3f} "
-                      f"temp={info['temp'] and float(info['temp']):} "
+        if bool(info.updated):
+            version += 1
+            params = spec.unflatten(g_vec)
+            if version % 5 == 0 or version == args.rounds:
+                temp = float(info.temp) if bool(info.temp_valid) else None
+                print(f"[pretrain] agg {version:4d} "
+                      f"loss {np.mean(losses[-8:]):.3f} temp={temp} "
                       f"({time.time()-t0:.0f}s)")
 
     if args.ckpt:
@@ -132,15 +141,6 @@ def main():
     ppl1 = np.exp(np.mean(losses[-8:]))
     print(f"[pretrain] perplexity {ppl0:.1f} -> {ppl1:.1f} "
           f"(bigram floor ~ branching=8)")
-
-
-_AGG_COUNT = {"n": 0}
-
-
-def psa_version(psa) -> int:
-    # server_aggregate clears the buffer; count completed aggregations
-    # by tracking thermometer pushes / buffer size
-    return int(psa.thermo.count) // psa.cfg.buffer_size
 
 
 if __name__ == "__main__":

@@ -108,3 +108,44 @@ def unflatten_from_vector(vec, like):
         out.append(vec[off : off + n].reshape(l.shape).astype(l.dtype))
         off += n
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def ring_update(data, row, count):
+    """Write ``row`` into the ring slot ``count % capacity`` of the stacked
+    buffer ``data`` (leading axis = capacity). The single ring-write used by
+    every fixed-size buffer in the server core."""
+    slot = jnp.mod(count, data.shape[0])
+    return jax.lax.dynamic_update_index_in_dim(data, row, slot, axis=0), slot
+
+
+class FlatSpec:
+    """Flatten-once descriptor of a pytree's flat f32 layout.
+
+    Built once from a template tree; afterwards ``flatten``/``unflatten`` are
+    pure shape/offset arithmetic (static under jit, no re-walking of python
+    structure per call). This is the parameter layout the functional server
+    core operates on: a single contiguous ``(d,)`` f32 vector.
+    """
+
+    def __init__(self, template):
+        leaves, self.treedef = jax.tree_util.tree_flatten(template)
+        self.shapes = tuple(l.shape for l in leaves)
+        self.dtypes = tuple(l.dtype for l in leaves)
+        self.sizes = tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+        self.offsets = tuple(np.cumsum((0,) + self.sizes)[:-1].tolist())
+        self.size = int(sum(self.sizes))
+
+    def flatten(self, tree) -> jnp.ndarray:
+        """Tree -> contiguous (d,) f32 vector (jit-friendly)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        return jnp.concatenate(
+            [l.astype(jnp.float32).reshape(-1) for l in leaves])
+
+    def unflatten(self, vec: jnp.ndarray):
+        """(d,) vector -> tree with the template's shapes/dtypes."""
+        out = [
+            jax.lax.dynamic_slice_in_dim(vec, off, n).reshape(shp).astype(dt)
+            for off, n, shp, dt in zip(self.offsets, self.sizes,
+                                       self.shapes, self.dtypes)
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, out)

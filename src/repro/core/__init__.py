@@ -32,6 +32,7 @@ from repro.core.aggregation import (
     psa_weights,
     uniform_weights,
     aggregate_buffer,
+    aggregate_flat,
     staleness_constant,
     staleness_polynomial,
     staleness_hinge,
@@ -39,10 +40,11 @@ from repro.core.aggregation import (
 from repro.core.psa import (
     PSAConfig,
     PSAState,
+    PSAInfo,
     init_state,
     client_sketch,
     server_receive,
     server_aggregate,
-    refresh_global_sketch,
+    server_step,
     buffer_full,
 )

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import tree as tu
+from repro.kernels.buffer_agg import buffer_agg_pallas, resolve_interpret
 
 
 def psa_weights(kappas: jnp.ndarray, temp: jnp.ndarray) -> jnp.ndarray:
@@ -22,9 +23,23 @@ def uniform_weights(n: int) -> jnp.ndarray:
 
 def aggregate_buffer(global_params, updates: Sequence, weights: jnp.ndarray,
                      server_lr: float = 1.0):
-    """Eq. 20: w_g <- w_g + sum_i Weight_i * dw_i."""
+    """Eq. 20 over pytrees: w_g <- w_g + sum_i Weight_i * dw_i."""
     delta = tu.tree_weighted_sum(list(updates), weights * server_lr)
     return tu.tree_add(global_params, delta)
+
+
+def aggregate_flat(global_vec: jnp.ndarray, updates: jnp.ndarray,
+                   weights: jnp.ndarray, server_lr: float = 1.0) -> jnp.ndarray:
+    """Eq. 20 over the flat layout: updates stacked (L, d), global (d,).
+
+    On TPU this routes through the compiled Pallas buffer_agg kernel (one
+    streaming pass, no (L x d) temporary); off-TPU the mathematically
+    identical jnp contraction is cheaper than interpreting the kernel."""
+    w = weights.astype(jnp.float32) * server_lr
+    g = global_vec.astype(jnp.float32)
+    if resolve_interpret(None):  # non-TPU backend
+        return g + jnp.einsum("l,ld->d", w, updates.astype(jnp.float32))
+    return buffer_agg_pallas(w, g, updates)
 
 
 # ---------------------------------------------------------------------------

@@ -1,27 +1,31 @@
-"""FedPSA — the paper's contribution as a composable module.
+"""FedPSA — the paper's contribution as a *functional* composable module.
 
 Client side: ``client_sketch`` computes the Eq. 8 sensitivity on the shared
-calibration batch and compresses it to a k-vector (Eq. 11). Server side:
-``PSAState``/``server_receive``/``server_aggregate`` implement Algorithm 1 —
-buffer + kappa scoring + thermometer + temperature-softmax aggregation.
+calibration batch and compresses it to a k-vector (Eq. 11) — by default via
+the fused Pallas sensitivity+sketch kernel. Server side: ``PSAState`` is an
+immutable NamedTuple pytree holding a fixed-size stacked ``(L_s, d)`` update
+ring buffer; ``server_receive`` / ``server_aggregate`` are pure functions
+and ``server_step`` fuses them (receive + conditional aggregate + optional
+global-sketch refresh) into ONE jit-compilable device step with
+``lax.cond`` replacing all host-side branching.
 
-The module is runtime-agnostic: the event-driven federated simulator uses it
-directly, and ``launch/dryrun.py`` lowers ``client_sketch`` / the aggregation
-under the production meshes (the sketch shards elementwise; kappa needs one
-k-float all-reduce).
+The buffered Eq. 20 apply runs through the Pallas ``buffer_agg`` kernel over
+the flat contiguous parameter layout (compiled on TPU, interpreter fallback
+elsewhere). The event-driven federated simulator consumes this module via
+``repro.federated.policies``; ``launch/dryrun.py`` lowers ``client_sketch``
+under the production meshes.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Callable, List, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.common import tree as tu
 from repro.core import aggregation, sketch, thermometer
-from repro.core.sensitivity import sensitivity as _compute_sensitivity
+from repro.core.sensitivity import fisher_diagonal, sensitivity as _compute_sensitivity
 
 
 @dataclass(frozen=True)
@@ -38,81 +42,164 @@ class PSAConfig:
     use_thermometer: bool = True  # False => fixed Temp = delta+gamma (w/o T ablation)
 
 
-def client_sketch(loss_fn: Callable, params, calib_batch, cfg: PSAConfig) -> jnp.ndarray:
+def client_sketch(loss_fn: Callable, params, calib_batch, cfg: PSAConfig,
+                  *, fused: Optional[bool] = None) -> jnp.ndarray:
     """What a client uploads alongside its update: the k-dim sensitivity
-    sketch evaluated on the shared calibration batch."""
-    if cfg.use_sensitivity:
-        s = _compute_sensitivity(loss_fn, params, calib_batch,
-                                 cfg.fisher_microbatches)
-    else:
-        s = params  # w/o S ablation: sketch the raw parameters
+    sketch evaluated on the shared calibration batch.
+
+    ``fused=True`` routes through the Pallas sensitivity+sketch kernel (the
+    d-sized sensitivity vector is never materialized in HBM); ``fused=False``
+    keeps the reference two-pass jnp pipeline. Default (None) picks the
+    kernel on TPU and the cheaper reference path elsewhere (interpreting the
+    kernel off-TPU costs more than the jnp pipeline it fuses).
+    """
+    if fused is None:
+        from repro.kernels.buffer_agg import resolve_interpret
+        fused = not resolve_interpret(None)  # fused kernel only on TPU
+    if not cfg.use_sensitivity:  # w/o S ablation: sketch the raw parameters
+        return sketch.sketch_tree(params, cfg.sketch_seed, cfg.sketch_k)
+    if fused:
+        from repro.kernels import ops  # deferred: avoids import cycle at pkg init
+        g = jax.grad(loss_fn)(params, calib_batch)
+        f = fisher_diagonal(loss_fn, params, calib_batch, cfg.fisher_microbatches)
+        return ops.sketch_tree_fused(params, g, f, k=cfg.sketch_k,
+                                     seed=cfg.sketch_seed)
+    s = _compute_sensitivity(loss_fn, params, calib_batch,
+                             cfg.fisher_microbatches)
     return sketch.sketch_tree(s, cfg.sketch_seed, cfg.sketch_k)
 
 
-class BufferEntry(NamedTuple):
-    update: object           # pytree dw_i
-    kappa: jnp.ndarray       # behavioral similarity vs the global sketch
+class PSAState(NamedTuple):
+    """Server-side Algorithm-1 state as an immutable pytree of arrays.
 
-
-@dataclasses.dataclass
-class PSAState:
-    """Server-side mutable state (python-level; the math inside is jnp)."""
-    cfg: PSAConfig
-    thermo: thermometer.ThermometerState
-    buffer: List[BufferEntry] = dataclasses.field(default_factory=list)
-    global_sketch: Optional[jnp.ndarray] = None
-
-
-def init_state(cfg: PSAConfig) -> PSAState:
-    return PSAState(cfg=cfg, thermo=thermometer.init_thermometer(cfg.queue_len))
-
-
-def refresh_global_sketch(state: PSAState, loss_fn, global_params, calib_batch):
-    """Recompute the server model's sensitivity sketch (after each update)."""
-    state.global_sketch = client_sketch(loss_fn, global_params, calib_batch, state.cfg)
-
-
-def server_receive(state: PSAState, update, client_sketch_vec: jnp.ndarray):
-    """Algorithm 1 lines 14-16: push (dw, kappa) into the buffer and the
-    update magnitude into the thermometer queue."""
-    kappa = sketch.cosine(client_sketch_vec, state.global_sketch)
-    state.buffer.append(BufferEntry(update, kappa))
-    m = tu.tree_sq_norm(update)  # Eq. 16
-    state.thermo = thermometer.push(state.thermo, m)
-
-
-def buffer_full(state: PSAState) -> bool:
-    return len(state.buffer) >= state.cfg.buffer_size
-
-
-def server_aggregate(state: PSAState, global_params):
-    """Algorithm 1 lines 17-31: weight the buffered updates and apply them.
-
-    Uniform averaging until the thermometer queue first fills; afterwards the
-    temperature-softmax of the kappa scores (Eq. 18-20).
+    ``buffer`` is a stacked ``(L_s, d)`` ring over the flat f32 parameter
+    layout; ``count`` is the fill level since the last aggregation (the slot
+    cycling makes clearing implicit — aggregation resets ``count`` to 0 and
+    stale slots are simply overwritten on the next cycle).
     """
-    cfg = state.cfg
-    n = len(state.buffer)
-    assert n > 0, "aggregate called with empty buffer"
-    kappas = jnp.stack([e.kappa for e in state.buffer])
+    buffer: jnp.ndarray          # (L_s, d) stacked update ring
+    kappas: jnp.ndarray          # (L_s,) behavioral similarity per slot
+    count: jnp.ndarray           # int32 fill level since last aggregate
+    thermo: thermometer.ThermometerState
+    global_sketch: jnp.ndarray   # (k,) sketch of the current global model
+
+    @property
+    def buffer_size(self) -> int:
+        return self.buffer.shape[0]
+
+
+class PSAInfo(NamedTuple):
+    """Per-step diagnostics with fixed shapes (jit-friendly; ``temp_valid``
+    distinguishes the uniform-averaging phase where legacy code used None)."""
+    updated: jnp.ndarray         # bool — did this step apply an aggregation
+    weights: jnp.ndarray         # (L_s,) aggregation weights (zeros if not)
+    kappas: jnp.ndarray          # (L_s,) buffer kappa snapshot
+    temp: jnp.ndarray            # f32 softmax temperature
+    temp_valid: jnp.ndarray      # bool — temp meaningful (queue was full)
+    m_cur: jnp.ndarray           # f32 thermometer current mean
+
+
+def init_state(cfg: PSAConfig, d: int,
+               global_sketch: Optional[jnp.ndarray] = None) -> PSAState:
+    """Fresh server state for a d-parameter model."""
+    if global_sketch is None:
+        global_sketch = jnp.zeros((cfg.sketch_k,), jnp.float32)
+    return PSAState(
+        buffer=jnp.zeros((cfg.buffer_size, d), jnp.float32),
+        kappas=jnp.zeros((cfg.buffer_size,), jnp.float32),
+        count=jnp.int32(0),
+        thermo=thermometer.init_thermometer(cfg.queue_len),
+        global_sketch=jnp.asarray(global_sketch, jnp.float32),
+    )
+
+
+def server_receive(state: PSAState, update_vec: jnp.ndarray,
+                   client_sketch_vec: jnp.ndarray) -> PSAState:
+    """Algorithm 1 lines 14-16 (pure): write (dw, kappa) into the next ring
+    slot and push the update magnitude into the thermometer queue.
+
+    Contract: aggregate once ``buffer_full`` — the fixed-size ring means a
+    push beyond ``buffer_size`` unflushed receives overwrites the oldest
+    slot (the legacy list buffer grew unboundedly instead). The fused
+    ``server_step`` honors this by construction."""
+    kappa = sketch.cosine(client_sketch_vec, state.global_sketch)
+    buffer, slot = tu.ring_update(state.buffer,
+                                  update_vec.astype(jnp.float32), state.count)
+    kappas = state.kappas.at[slot].set(kappa)
+    m = jnp.sum(jnp.square(update_vec.astype(jnp.float32)))  # Eq. 16
+    return state._replace(buffer=buffer, kappas=kappas,
+                          count=state.count + 1,
+                          thermo=thermometer.push(state.thermo, m))
+
+
+def buffer_full(state: PSAState) -> jnp.ndarray:
+    return state.count >= state.buffer_size
+
+
+def _weights_and_temp(state: PSAState, cfg: PSAConfig):
+    """Eq. 18-19 with the Algorithm-1 phase switch as a jnp select: uniform
+    averaging until the thermometer queue first fills, temperature softmax
+    afterwards (or always, with a fixed temp, under the w/o T ablation)."""
+    L = state.buffer_size
+    uniform = aggregation.uniform_weights(L)
     if cfg.use_thermometer:
-        queue_ready = bool(thermometer.is_full(state.thermo))
-        if queue_ready:
-            temp = thermometer.temperature(state.thermo, cfg.gamma, cfg.delta)
-            weights = aggregation.psa_weights(kappas, temp)
-        else:
-            weights = aggregation.uniform_weights(n)
-            temp = None
-    else:  # w/o T ablation: fixed early-phase temperature
-        temp = jnp.float32(cfg.gamma + cfg.delta)
-        weights = aggregation.psa_weights(kappas, temp)
-    new_global = aggregation.aggregate_buffer(
-        global_params, [e.update for e in state.buffer], weights, cfg.server_lr)
-    state.buffer.clear()
-    info = {
-        "weights": weights,
-        "kappas": kappas,
-        "temp": temp,
-        "m_cur": thermometer.current_mean(state.thermo),
-    }
-    return new_global, info
+        queue_ready = thermometer.is_full(state.thermo)
+        temp = thermometer.temperature(state.thermo, cfg.gamma, cfg.delta)
+        weights = jnp.where(queue_ready,
+                            aggregation.psa_weights(state.kappas, temp),
+                            uniform)
+        return weights, temp, queue_ready
+    temp = jnp.float32(cfg.gamma + cfg.delta)
+    return aggregation.psa_weights(state.kappas, temp), temp, jnp.bool_(True)
+
+
+def server_aggregate(state: PSAState, global_vec: jnp.ndarray,
+                     cfg: PSAConfig):
+    """Algorithm 1 lines 17-31 (pure): weight the buffered updates and apply
+    them to the flat global vector via the Pallas buffer_agg kernel.
+
+    Returns ``(new_state, new_global_vec, PSAInfo)`` — the same ordering as
+    the fused ``server_step``. Call only when ``buffer_full`` (``server_step``
+    handles the gating for you).
+    """
+    weights, temp, temp_valid = _weights_and_temp(state, cfg)
+    new_global = aggregation.aggregate_flat(global_vec, state.buffer, weights,
+                                            cfg.server_lr)
+    info = PSAInfo(updated=jnp.bool_(True), weights=weights,
+                   kappas=state.kappas, temp=temp,
+                   temp_valid=jnp.asarray(temp_valid),
+                   m_cur=thermometer.current_mean(state.thermo))
+    return state._replace(count=jnp.int32(0)), new_global, info
+
+
+def server_step(state: PSAState, global_vec: jnp.ndarray,
+                update_vec: jnp.ndarray, client_sketch_vec: jnp.ndarray,
+                cfg: PSAConfig,
+                refresh_fn: Optional[Callable] = None):
+    """One fused Algorithm-1 server step: receive, and — iff the buffer just
+    filled — aggregate and refresh the global sketch, all under ``lax.cond``
+    so the whole arrival path compiles to a single device call.
+
+    ``refresh_fn(global_vec) -> (k,)`` recomputes the global model's
+    sensitivity sketch after an update (traced into the taken branch only).
+    Returns ``(new_state, new_global_vec, PSAInfo)``.
+    """
+    state = server_receive(state, update_vec, client_sketch_vec)
+    L = state.buffer_size
+
+    def do_aggregate(state, global_vec):
+        state, new_global, info = server_aggregate(state, global_vec, cfg)
+        if refresh_fn is not None:
+            state = state._replace(global_sketch=refresh_fn(new_global))
+        return state, new_global, info
+
+    def no_aggregate(state, global_vec):
+        info = PSAInfo(updated=jnp.bool_(False),
+                       weights=jnp.zeros((L,), jnp.float32),
+                       kappas=state.kappas,
+                       temp=jnp.float32(0.0), temp_valid=jnp.bool_(False),
+                       m_cur=thermometer.current_mean(state.thermo))
+        return state, global_vec.astype(jnp.float32), info
+
+    return jax.lax.cond(buffer_full(state), do_aggregate, no_aggregate,
+                        state, global_vec)

@@ -44,6 +44,20 @@ def leaf_seed(seed: int, leaf_index: int) -> jnp.ndarray:
     return pcg_hash(jnp.uint32(seed) ^ (jnp.uint32(leaf_index) * jnp.uint32(0x9E3779B9)))
 
 
+def leaf_seed_host(seed: int, leaf_index: int) -> int:
+    """``leaf_seed`` as pure-python uint32 arithmetic (bit-identical) — a
+    static per-leaf constant usable while tracing an outer jit."""
+    M = 0xFFFFFFFF
+
+    def pcg(x: int) -> int:
+        state = (x * 747796405 + 2891336453) & M
+        word = ((state >> (((state >> 28) + 4) & 31)) ^ state) & M
+        word = (word * 277803737) & M
+        return ((word >> 22) ^ word) & M
+
+    return pcg((seed ^ ((leaf_index * 0x9E3779B9) & M)) & M)
+
+
 def rademacher_row(seed_u32, lin_idx: jnp.ndarray, r: int, k: int) -> jnp.ndarray:
     """±1 f32 signs for projection row r at flat positions ``lin_idx``."""
     h = pcg_hash(seed_u32 ^ pcg_hash(lin_idx * jnp.uint32(k) + jnp.uint32(r)))

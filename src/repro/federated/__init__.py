@@ -7,6 +7,15 @@ from repro.federated.simulator import (
     make_sketch_fn,
     ALGORITHMS,
 )
-from repro.federated.servers import make_server
+from repro.federated.servers import make_server, PolicyServer
+from repro.federated.policies import (
+    Arrival,
+    Policy,
+    ServerState,
+    StepInfo,
+    make_policy,
+    POLICY_NAMES,
+)
+from repro.federated.legacy import make_legacy_server
 from repro.federated.client import local_update
 from repro.federated.latency import make_latency_sampler, per_client_latency

@@ -1,0 +1,378 @@
+"""Functional staleness-policy core: every async server is one pure step.
+
+The server side of each algorithm is expressed as a ``Policy`` — an ``init``
+building an immutable ``ServerState`` pytree (flat contiguous f32 parameter
+vector + fixed-size stacked ring buffers) and a pure, jit-compiled,
+buffer-donating
+
+    ``policy.step(state, arrival) -> (state, StepInfo)``
+
+with ``lax.cond`` replacing all host-side branching, so one arrival costs at
+most ONE device call (aggregation, when the buffer fills, happens inside the
+same fused step; FedPSA's global-sketch refresh is traced into the taken
+branch of the cond). Buffered Eq. 20 applies run through the Pallas
+``buffer_agg`` kernel over the flat layout.
+
+Staleness weighting is a design space (AsyncFedED's Euclidean-distance
+adaptive weights, the distance-metric ablations of "Revisiting Gradient
+Staleness", the paper's behavioral kappa) — adding a policy means writing
+one ``step`` function and registering it; see ARCHITECTURE.md for a ~30-line
+walkthrough.
+
+Implemented: fedasync, fedbuff, fedpsa, ca2fl, fedfa, fedpac, plus the
+distance-based ``asyncfeded`` proving pluggability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import tree as tu
+from repro.core import aggregation, psa as psa_lib
+
+
+class RingState(NamedTuple):
+    """Fixed-size stacked ring buffer over the flat parameter layout."""
+    data: jnp.ndarray    # (L, d) f32
+    count: jnp.ndarray   # int32 — fill level (flush policies) or total writes
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+
+class CacheState(NamedTuple):
+    """CA2FL per-client cached deltas h_i plus their running sum."""
+    data: jnp.ndarray    # (num_clients, d) f32
+    valid: jnp.ndarray   # (num_clients,) bool — client seen at least once
+    total: jnp.ndarray   # (d,) f32 running sum of cached deltas
+
+
+class ServerState(NamedTuple):
+    """One pytree for every policy; unused sub-states are None (static
+    structure, so each policy jit-compiles its own step once)."""
+    params: jnp.ndarray                         # (d,) flat f32 global model
+    version: jnp.ndarray                        # int32 completed updates
+    ring: Optional[RingState]
+    psa: Optional[psa_lib.PSAState]
+    cache: Optional[CacheState]
+
+
+class Arrival(NamedTuple):
+    """One client completion as the server sees it. ``update`` and
+    ``client_params`` keep the client's pytree layout — flattening happens
+    inside the jitted step (one fused device call per arrival)."""
+    update: Any              # pytree dw_i
+    client_params: Any       # pytree w_i
+    tau: jnp.ndarray         # f32 version gap at ingest
+    client_id: jnp.ndarray   # int32
+    data_size: jnp.ndarray   # f32
+    sketch: jnp.ndarray      # (k,) f32 behavioral sketch (zeros if unused)
+
+
+class StepInfo(NamedTuple):
+    """Fixed-shape per-step diagnostics (host converts to logs)."""
+    updated: jnp.ndarray     # bool — global params changed this step
+    weights: jnp.ndarray     # (L,) aggregation weights (L=0 for mix policies)
+    kappas: jnp.ndarray      # (L,) buffer kappas (fedpsa)
+    temp: jnp.ndarray        # f32 softmax temperature (fedpsa)
+    temp_valid: jnp.ndarray  # bool — temp meaningful (thermometer full)
+    mix: jnp.ndarray         # f32 mixing/scale coefficient (mix policies)
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """The pluggable staleness-policy interface."""
+    name: str
+    init: Callable[[Any], ServerState]           # params pytree -> state
+    step: Callable[[ServerState, Arrival], Tuple[ServerState, StepInfo]]
+    spec: tu.FlatSpec                            # flat <-> pytree layout
+    sketch_k: int = 0
+    needs_sketch: bool = False
+    client_align: float = 0.0
+    # (StepInfo, meta) -> host log dict for an applied update, or None.
+    # Owned by the policy so new policies get logging without shim edits.
+    log_fn: Optional[Callable[[StepInfo, dict], Optional[dict]]] = None
+
+
+def _log_mix(info: StepInfo, meta: dict) -> dict:
+    return {"tau": meta.get("tau", 0), "weight": float(info.mix)}
+
+
+def _log_psa(info: StepInfo, meta: dict) -> dict:
+    return {
+        "weights": np.asarray(info.weights),
+        "kappas": np.asarray(info.kappas),
+        "temp": float(info.temp) if bool(info.temp_valid) else None,
+    }
+
+
+# Donating the state buffers lets XLA update the (L, d) ring and the flat
+# params in place instead of copying them every arrival.
+def jit_step(fn):
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def _ring_push(ring: RingState, row: jnp.ndarray) -> RingState:
+    data, _ = tu.ring_update(ring.data, row.astype(jnp.float32), ring.count)
+    return RingState(data=data, count=ring.count + 1)
+
+
+def make_info(L: int, *, updated, weights=None, kappas=None, temp=0.0,
+              temp_valid=False, mix=0.0) -> StepInfo:
+    z = jnp.zeros((L,), jnp.float32)
+    return StepInfo(
+        updated=jnp.asarray(updated, jnp.bool_),
+        weights=z if weights is None else weights.astype(jnp.float32),
+        kappas=z if kappas is None else kappas.astype(jnp.float32),
+        temp=jnp.asarray(temp, jnp.float32),
+        temp_valid=jnp.asarray(temp_valid, jnp.bool_),
+        mix=jnp.asarray(mix, jnp.float32),
+    )
+
+
+def base_state(spec: tu.FlatSpec, params) -> ServerState:
+    # copy: for a single-leaf f32 tree flatten can alias the caller's buffer,
+    # which the donating step would invalidate on the first receive
+    vec = jnp.array(spec.flatten(params), copy=True)
+    return ServerState(params=vec, version=jnp.int32(0),
+                       ring=None, psa=None, cache=None)
+
+
+# ---------------------------------------------------------------------------
+# Immediate-mix policies (one global update per arrival)
+# ---------------------------------------------------------------------------
+
+def fedasync_policy(spec: tu.FlatSpec, alpha: float = 0.6,
+                    a: float = 0.5) -> Policy:
+    """FedAsync: w <- (1-s)w + s*w_i with s = alpha*(1+tau)^-a."""
+
+    def step(state: ServerState, arr: Arrival):
+        s = aggregation.staleness_polynomial(arr.tau, alpha, a)
+        wi = spec.flatten(arr.client_params)
+        params = (1.0 - s) * state.params + s * wi
+        state = state._replace(params=params, version=state.version + 1)
+        return state, make_info(0, updated=True, mix=s)
+
+    return Policy(name="fedasync", init=lambda p: base_state(spec, p),
+                  step=jit_step(step), spec=spec, log_fn=_log_mix)
+
+
+def asyncfeded_policy(spec: tu.FlatSpec, alpha: float = 0.6,
+                      eps: float = 1e-8) -> Policy:
+    """AsyncFedED-style Euclidean-distance staleness: instead of the version
+    gap tau, staleness is measured in parameter space as the distance between
+    the current global model and the returning client model. The applied
+    server step is  w <- w + s * dw  with
+
+        s = alpha * min(1, ||dw|| / (||w_i - w|| + eps)),
+
+    i.e. a fresh client (w_i - w ~ dw) gets the full alpha while a client
+    whose base model has drifted far from the current global is damped by
+    exactly its relative drift. One-function variant proving the policy
+    interface is pluggable."""
+
+    def step(state: ServerState, arr: Arrival):
+        dw = spec.flatten(arr.update)
+        wi = spec.flatten(arr.client_params)
+        dist = jnp.sqrt(jnp.sum(jnp.square(wi - state.params)))
+        norm = jnp.sqrt(jnp.sum(jnp.square(dw)))
+        s = alpha * jnp.minimum(1.0, norm / (dist + eps))
+        state = state._replace(params=state.params + s * dw,
+                               version=state.version + 1)
+        return state, make_info(0, updated=True, mix=s)
+
+    return Policy(name="asyncfeded", init=lambda p: base_state(spec, p),
+                  step=jit_step(step), spec=spec, log_fn=_log_mix)
+
+
+# ---------------------------------------------------------------------------
+# Buffered policies (flush every L-th arrival)
+# ---------------------------------------------------------------------------
+
+def _buffered_policy(name: str, spec: tu.FlatSpec, buffer_size: int,
+                     server_lr: float, scale_fn, client_align: float = 0.0):
+    """Shared skeleton for FedBuff/FedPAC-lite: ring the (optionally
+    staleness-scaled) deltas, apply their uniform mean when full."""
+    L = buffer_size
+
+    def init(params) -> ServerState:
+        base = base_state(spec, params)
+        return base._replace(ring=RingState(
+            data=jnp.zeros((L, spec.size), jnp.float32), count=jnp.int32(0)))
+
+    def step(state: ServerState, arr: Arrival):
+        dw = spec.flatten(arr.update)
+        ring = _ring_push(state.ring, scale_fn(arr) * dw)
+
+        def flush(state, ring):
+            w = aggregation.uniform_weights(L)
+            params = aggregation.aggregate_flat(state.params, ring.data, w,
+                                               server_lr)
+            state = state._replace(params=params, version=state.version + 1,
+                                   ring=ring._replace(count=jnp.int32(0)))
+            return state, make_info(L, updated=True, weights=w)
+
+        def wait(state, ring):
+            return state._replace(ring=ring), make_info(L, updated=False)
+
+        return jax.lax.cond(ring.count >= L, flush, wait, state, ring)
+
+    return Policy(name=name, init=init, step=jit_step(step), spec=spec,
+                  client_align=client_align)
+
+
+def fedbuff_policy(spec: tu.FlatSpec, buffer_size: int = 5,
+                   server_lr: float = 1.0, a: float = 0.5) -> Policy:
+    """FedBuff: buffer K staleness-scaled deltas, apply their mean."""
+    return _buffered_policy(
+        "fedbuff", spec, buffer_size, server_lr,
+        lambda arr: aggregation.staleness_polynomial(arr.tau, 1.0, a))
+
+
+def fedpac_policy(spec: tu.FlatSpec, buffer_size: int = 5,
+                  server_lr: float = 1.0) -> Policy:
+    """FedPAC-lite: FedBuff-style buffering of raw deltas; clients train with
+    an extra classifier-alignment term (client.local_update(align=...))."""
+    return _buffered_policy("fedpac", spec, buffer_size, server_lr,
+                            lambda arr: jnp.float32(1.0), client_align=0.1)
+
+
+def fedpsa_policy(spec: tu.FlatSpec, cfg: psa_lib.PSAConfig,
+                  sketch_refresh: Optional[Callable] = None) -> Policy:
+    """FedPSA (Algorithm 1): behavioral-staleness softmax over the buffer.
+
+    ``sketch_refresh(flat_params) -> (k,)`` recomputes the global sketch
+    after each aggregation, inside the fused step (cond's taken branch)."""
+
+    def init(params) -> ServerState:
+        base = base_state(spec, params)
+        gs = None if sketch_refresh is None else sketch_refresh(base.params)
+        return base._replace(psa=psa_lib.init_state(cfg, spec.size, gs))
+
+    def step(state: ServerState, arr: Arrival):
+        dw = spec.flatten(arr.update)
+        psa, params, pi = psa_lib.server_step(
+            state.psa, state.params, dw, arr.sketch, cfg, sketch_refresh)
+        state = state._replace(
+            params=params, psa=psa,
+            version=state.version + pi.updated.astype(jnp.int32))
+        return state, make_info(cfg.buffer_size, updated=pi.updated,
+                            weights=pi.weights, kappas=pi.kappas,
+                            temp=pi.temp, temp_valid=pi.temp_valid)
+
+    return Policy(name="fedpsa", init=init, step=jit_step(step), spec=spec,
+                  sketch_k=cfg.sketch_k, needs_sketch=True, log_fn=_log_psa)
+
+
+def ca2fl_policy(spec: tu.FlatSpec, num_clients: int, buffer_size: int = 5,
+                 server_lr: float = 1.0) -> Policy:
+    """CA2FL: cached-update calibration. Buffers the residual vs the
+    client's previous delta; aggregation adds the cache mean back."""
+    L = buffer_size
+
+    def init(params) -> ServerState:
+        base = base_state(spec, params)
+        return base._replace(
+            ring=RingState(data=jnp.zeros((L, spec.size), jnp.float32),
+                           count=jnp.int32(0)),
+            cache=CacheState(
+                data=jnp.zeros((num_clients, spec.size), jnp.float32),
+                valid=jnp.zeros((num_clients,), jnp.bool_),
+                total=jnp.zeros((spec.size,), jnp.float32)))
+
+    def step(state: ServerState, arr: Arrival):
+        dw = spec.flatten(arr.update)
+        cid = arr.client_id
+        prev = state.cache.data[cid]  # zeros until the client is first seen
+        ring = _ring_push(state.ring, dw - prev)
+        cache = CacheState(data=state.cache.data.at[cid].set(dw),
+                           valid=state.cache.valid.at[cid].set(True),
+                           total=state.cache.total + dw - prev)
+
+        def flush(state, ring, cache):
+            w = aggregation.uniform_weights(L)
+            n_cached = jnp.maximum(
+                jnp.sum(cache.valid.astype(jnp.float32)), 1.0)
+            params = aggregation.aggregate_flat(state.params, ring.data, w,
+                                               server_lr)
+            params = params + server_lr * cache.total / n_cached
+            state = state._replace(params=params, version=state.version + 1,
+                                   ring=ring._replace(count=jnp.int32(0)),
+                                   cache=cache)
+            return state, make_info(L, updated=True, weights=w)
+
+        def wait(state, ring, cache):
+            state = state._replace(ring=ring, cache=cache)
+            return state, make_info(L, updated=False)
+
+        return jax.lax.cond(ring.count >= L, flush, wait, state, ring, cache)
+
+    return Policy(name="ca2fl", init=init, step=jit_step(step), spec=spec)
+
+
+def fedfa_policy(spec: tu.FlatSpec, queue_len: int = 5,
+                 beta: float = 0.5) -> Policy:
+    """FedFa: the global model is a recency-weighted average of the ring of
+    the last ``queue_len`` client models, refreshed on every arrival. The
+    ring count grows monotonically; slot ages are recovered from it (the
+    stacked-buffer replacement for the legacy O(n) list.pop(0) queue)."""
+    L = queue_len
+
+    def init(params) -> ServerState:
+        base = base_state(spec, params)
+        return base._replace(ring=RingState(
+            data=jnp.zeros((L, spec.size), jnp.float32), count=jnp.int32(0)))
+
+    def step(state: ServerState, arr: Arrival):
+        wi = spec.flatten(arr.client_params)
+        ring = _ring_push(state.ring, wi)
+        n = jnp.minimum(ring.count, L)
+        newest = jnp.mod(ring.count - 1, L)
+        age = jnp.mod(newest - jnp.arange(L, dtype=jnp.int32), L)
+        w = jnp.where(age < n, jnp.power(jnp.float32(beta),
+                                         age.astype(jnp.float32)), 0.0)
+        w = w / jnp.sum(w)
+        params = aggregation.aggregate_flat(
+            jnp.zeros_like(state.params), ring.data, w)
+        state = state._replace(params=params, version=state.version + 1,
+                               ring=ring)
+        return state, make_info(L, updated=True, weights=w)
+
+    return Policy(name="fedfa", init=init, step=jit_step(step), spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+POLICY_NAMES = ("fedasync", "fedbuff", "fedpsa", "ca2fl", "fedfa", "fedpac",
+                "asyncfeded")
+
+
+def make_policy(name: str, spec: tu.FlatSpec, *, num_clients: int = 50,
+                psa_cfg: Optional[psa_lib.PSAConfig] = None,
+                sketch_refresh: Optional[Callable] = None, **kw) -> Policy:
+    if name == "fedasync":
+        return fedasync_policy(spec, **kw)
+    if name == "fedbuff":
+        return fedbuff_policy(spec, **kw)
+    if name == "fedpsa":
+        # without a refresh the global sketch stays zeros, every kappa is 0
+        # and FedPSA silently degenerates to uniform (FedBuff-like) weighting
+        assert psa_cfg is not None and sketch_refresh is not None, \
+            "fedpsa needs psa_cfg and sketch_refresh"
+        return fedpsa_policy(spec, psa_cfg, sketch_refresh)
+    if name == "ca2fl":
+        return ca2fl_policy(spec, num_clients=num_clients, **kw)
+    if name == "fedfa":
+        return fedfa_policy(spec, **kw)
+    if name == "fedpac":
+        return fedpac_policy(spec, **kw)
+    if name == "asyncfeded":
+        return asyncfeded_policy(spec, **kw)
+    raise ValueError(f"unknown staleness policy {name!r}")

@@ -1,218 +1,118 @@
-"""Server-side aggregation strategies.
+"""Server-side aggregation strategies — thin shims over the policy core.
 
-Implemented: FedAsync [14], FedBuff [39], FedPSA (ours), CA2FL [15],
-FedFa [27], FedPAC-lite [40] (async servers share one interface), plus the
-synchronous FedAvg [5] which the simulator runs round-based.
+Every async algorithm (fedasync, fedbuff, fedpsa, ca2fl, fedfa, fedpac,
+asyncfeded; the synchronous fedavg runs round-based in the simulator) is a
+pure jit-compiled ``policy.step`` in ``repro.federated.policies``.
+``PolicyServer`` adapts that functional core to the legacy object interface
+the simulator and benchmarks speak:
 
-Interface:
     receive(delta, client_params, meta) -> bool   # True if global updated
     params                                        # current global pytree
     version                                       # number of global updates
+
 ``meta`` carries tau (version gap), client_id, data_size and, for FedPSA,
-the uploaded sensitivity sketch.
+the uploaded sensitivity sketch. One ``receive`` costs exactly one jitted
+device call; ``params`` unflattens the flat state vector lazily (cached per
+version). The original unjitted classes live in ``repro.federated.legacy``
+as the numerical reference.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.common import tree as tu
-from repro.core import aggregation as agg
 from repro.core import psa as psa_lib
-from repro.core import sketch as sketch_lib
+from repro.federated import policies as pol
 
 
-class BaseServer:
-    name = "base"
-    needs_sketch = False
+class PolicyServer:
+    """Host-side adapter around one ``Policy``: owns the ``ServerState``,
+    converts metas to ``Arrival``s, and renders ``StepInfo`` into the
+    per-update log the benchmarks consume."""
 
-    def __init__(self, params):
-        self.params = params
-        self.version = 0
+    def __init__(self, policy: pol.Policy, params):
+        self.policy = policy
+        self.name = policy.name
+        self.needs_sketch = policy.needs_sketch
+        self.client_align = policy.client_align
+        self.state = policy.init(params)
         self.log: List[dict] = []
+        self._version = 0
+        self._tree_cache = None
+        self._tree_cache_version = -1
+        self._unflatten = jax.jit(policy.spec.unflatten)
+
+    @property
+    def params(self):
+        if self._tree_cache_version != self._version:
+            self._tree_cache = self._unflatten(self.state.params)
+            self._tree_cache_version = self._version
+        return self._tree_cache
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def psa(self) -> Optional[psa_lib.PSAState]:
+        """Snapshot of the FedPSA sub-state (e.g. ``server.psa.global_sketch``).
+
+        Copied: the live state's buffers are donated to the next jitted step,
+        so a reference held across ``receive`` would be a deleted array."""
+        if self.state.psa is None:
+            return None
+        return jax.tree_util.tree_map(jnp.copy, self.state.psa)
 
     def receive(self, delta, client_params, meta) -> bool:
-        raise NotImplementedError
-
-
-class FedAsyncServer(BaseServer):
-    """FedAsync: immediate mixing w <- (1-a)w + a*w_i, a = alpha*s(tau)."""
-    name = "fedasync"
-
-    def __init__(self, params, alpha: float = 0.6, a: float = 0.5):
-        super().__init__(params)
-        self.alpha, self.a = alpha, a
-
-    def receive(self, delta, client_params, meta) -> bool:
-        s = float(agg.staleness_polynomial(meta["tau"], self.alpha, self.a))
-        self.params = jax.tree_util.tree_map(
-            lambda w, wi: (1 - s) * w + s * wi, self.params, client_params)
-        self.version += 1
-        self.log.append({"tau": meta["tau"], "weight": s})
-        return True
-
-
-class FedBuffServer(BaseServer):
-    """FedBuff: buffer K staleness-scaled deltas, apply their mean."""
-    name = "fedbuff"
-
-    def __init__(self, params, buffer_size: int = 5, server_lr: float = 1.0,
-                 a: float = 0.5):
-        super().__init__(params)
-        self.buffer_size = buffer_size
-        self.server_lr = server_lr
-        self.a = a
-        self.buffer: List = []
-
-    def receive(self, delta, client_params, meta) -> bool:
-        scale = float(agg.staleness_polynomial(meta["tau"], 1.0, self.a))
-        self.buffer.append(tu.tree_scale(delta, scale))
-        if len(self.buffer) < self.buffer_size:
-            return False
-        w = agg.uniform_weights(len(self.buffer)) * self.server_lr
-        self.params = agg.aggregate_buffer(self.params, self.buffer, w)
-        self.buffer.clear()
-        self.version += 1
-        return True
-
-
-class FedPSAServer(BaseServer):
-    """FedPSA (Algorithm 1): behavioral-staleness softmax over the buffer."""
-    name = "fedpsa"
-    needs_sketch = True
-
-    def __init__(self, params, cfg_psa: psa_lib.PSAConfig,
-                 sketch_fn: Callable):
-        super().__init__(params)
-        self.psa = psa_lib.init_state(cfg_psa)
-        self.sketch_fn = sketch_fn  # params -> k-vector (shared calib batch)
-        self.psa.global_sketch = sketch_fn(params)
-
-    def receive(self, delta, client_params, meta) -> bool:
-        psa_lib.server_receive(self.psa, delta, meta["sketch"])
-        if not psa_lib.buffer_full(self.psa):
-            return False
-        self.params, info = psa_lib.server_aggregate(self.psa, self.params)
-        self.version += 1
-        self.psa.global_sketch = self.sketch_fn(self.params)
-        self.log.append({
-            "weights": np.asarray(info["weights"]),
-            "kappas": np.asarray(info["kappas"]),
-            "temp": None if info["temp"] is None else float(info["temp"]),
-        })
-        return True
-
-
-class CA2FLServer(BaseServer):
-    """CA2FL: cached-update calibration. Keeps the latest delta h_i per
-    client; aggregation calibrates the buffer mean with the cache mean."""
-    name = "ca2fl"
-
-    def __init__(self, params, num_clients: int, buffer_size: int = 5,
-                 server_lr: float = 1.0):
-        super().__init__(params)
-        self.buffer_size = buffer_size
-        self.server_lr = server_lr
-        self.buffer: List = []
-        self.cache: Dict[int, object] = {}
-        self.num_clients = num_clients
-        self.h_sum = None  # running sum of cached deltas
-
-    def receive(self, delta, client_params, meta) -> bool:
-        cid = meta["client_id"]
-        prev = self.cache.get(cid)
-        self.buffer.append((delta, prev))
-        # update cache & running sum
-        if self.h_sum is None:
-            self.h_sum = tu.tree_zeros_like(delta)
-        if prev is not None:
-            self.h_sum = tu.tree_sub(self.h_sum, prev)
-        self.h_sum = tu.tree_add(self.h_sum, delta)
-        self.cache[cid] = delta
-        if len(self.buffer) < self.buffer_size:
-            return False
-        n_cached = max(len(self.cache), 1)
-        h_mean = tu.tree_scale(self.h_sum, 1.0 / n_cached)
-        resid = [tu.tree_sub(d, p) if p is not None else d
-                 for d, p in self.buffer]
-        v = tu.tree_add(
-            tu.tree_scale(
-                jax.tree_util.tree_map(lambda *xs: sum(xs), *resid)
-                if len(resid) > 1 else resid[0],
-                1.0 / len(resid)),
-            h_mean)
-        self.params = tu.tree_axpy(self.server_lr, v, self.params)
-        self.buffer.clear()
-        self.version += 1
-        return True
-
-
-class FedFaServer(BaseServer):
-    """FedFa: fully-asynchronous queue of recent client models; the global
-    model is a recency-weighted average of the queue, refreshed per arrival."""
-    name = "fedfa"
-
-    def __init__(self, params, queue_len: int = 5, beta: float = 0.5):
-        super().__init__(params)
-        self.queue_len = queue_len
-        self.beta = beta
-        self.queue: List = []
-
-    def receive(self, delta, client_params, meta) -> bool:
-        self.queue.append(client_params)
-        if len(self.queue) > self.queue_len:
-            self.queue.pop(0)
-        n = len(self.queue)
-        w = np.array([self.beta ** (n - 1 - j) for j in range(n)], np.float32)
-        w /= w.sum()
-        self.params = tu.tree_weighted_sum(list(self.queue), jnp.asarray(w))
-        self.version += 1
-        return True
-
-
-class FedPACLiteServer(BaseServer):
-    """FedPAC-lite: FedBuff-style buffering; clients train with an extra
-    classifier-alignment term (see client.local_update(align=...)). The
-    feature-alignment of the full method is approximated by the head
-    alignment — enough to reproduce its qualitative async behavior."""
-    name = "fedpac"
-    client_align = 0.1
-
-    def __init__(self, params, buffer_size: int = 5, server_lr: float = 1.0):
-        super().__init__(params)
-        self.buffer_size = buffer_size
-        self.server_lr = server_lr
-        self.buffer: List = []
-
-    def receive(self, delta, client_params, meta) -> bool:
-        self.buffer.append(delta)
-        if len(self.buffer) < self.buffer_size:
-            return False
-        w = agg.uniform_weights(len(self.buffer)) * self.server_lr
-        self.params = agg.aggregate_buffer(self.params, self.buffer, w)
-        self.buffer.clear()
-        self.version += 1
-        return True
+        if self.needs_sketch and "sketch" not in meta:
+            raise KeyError(
+                f"{self.name} requires meta['sketch'] (behavioral sketch)")
+        if self.state.cache is not None:
+            cid = int(meta["client_id"])  # cache policies require a real id
+            if not 0 <= cid < self.state.cache.data.shape[0]:
+                raise ValueError(
+                    f"client_id {cid} outside the server's num_clients="
+                    f"{self.state.cache.data.shape[0]} cache")
+        else:
+            cid = int(meta.get("client_id", 0))
+        arrival = pol.Arrival(
+            update=delta,
+            client_params=client_params,
+            tau=jnp.float32(meta.get("tau", 0)),
+            client_id=jnp.int32(cid),
+            data_size=jnp.float32(meta.get("data_size", 1.0)),
+            sketch=jnp.asarray(
+                meta["sketch"], jnp.float32) if "sketch" in meta
+            else jnp.zeros((self.policy.sketch_k,), jnp.float32),
+        )
+        self.state, info = self.policy.step(self.state, arrival)
+        updated = bool(info.updated)
+        if updated:
+            self._version += 1
+            if self.policy.log_fn is not None:
+                entry = self.policy.log_fn(info, meta)
+                if entry is not None:
+                    self.log.append(entry)
+        return updated
 
 
 def make_server(name: str, params, *, num_clients: int = 50,
                 psa_cfg: Optional[psa_lib.PSAConfig] = None,
-                sketch_fn: Optional[Callable] = None, **kw) -> BaseServer:
-    if name == "fedasync":
-        return FedAsyncServer(params, **kw)
-    if name == "fedbuff":
-        return FedBuffServer(params, **kw)
+                sketch_fn: Optional[Callable] = None, **kw) -> PolicyServer:
+    """Build the policy-backed server for one algorithm.
+
+    ``sketch_fn`` (fedpsa) maps a params *pytree* to its (k,) sketch; the
+    policy core re-expresses it over the flat layout so the global-sketch
+    refresh fuses into the jitted step."""
+    spec = tu.FlatSpec(params)
+    sketch_refresh = None
     if name == "fedpsa":
         assert psa_cfg is not None and sketch_fn is not None
-        return FedPSAServer(params, psa_cfg, sketch_fn)
-    if name == "ca2fl":
-        return CA2FLServer(params, num_clients=num_clients, **kw)
-    if name == "fedfa":
-        return FedFaServer(params, **kw)
-    if name == "fedpac":
-        return FedPACLiteServer(params, **kw)
-    raise ValueError(f"unknown async server {name!r}")
+        sketch_refresh = lambda vec: sketch_fn(spec.unflatten(vec))
+    policy = pol.make_policy(name, spec, num_clients=num_clients,
+                             psa_cfg=psa_cfg, sketch_refresh=sketch_refresh,
+                             **kw)
+    return PolicyServer(policy, params)

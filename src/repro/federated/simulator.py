@@ -126,7 +126,8 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
     evaluate = _make_eval(cfg, test_ds, sim)
     result = SimResult()
     concurrency = max(1, int(round(sim.concurrency * sim.num_clients)))
-    heap: List[Tuple[float, int, int, object]] = []  # (t_done, seq, cid, snapshot)
+    # (t_done, seq, cid, snapshot, version_at_dispatch)
+    heap: List[Tuple[float, int, int, object, int]] = []
     seq = 0
     data_sizes = np.array([len(d) for d in client_datasets], np.float64)
 
@@ -221,7 +222,8 @@ def run_fedavg(cfg: ModelConfig, init_params, client_datasets: List[ClientDatase
     return result
 
 
-ALGORITHMS = ("fedavg", "fedasync", "fedbuff", "fedpsa", "ca2fl", "fedfa", "fedpac")
+ALGORITHMS = ("fedavg", "fedasync", "fedbuff", "fedpsa", "ca2fl", "fedfa",
+              "fedpac", "asyncfeded")
 
 
 def run_algorithm(name: str, cfg: ModelConfig, init_params, client_datasets,

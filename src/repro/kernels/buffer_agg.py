@@ -11,12 +11,21 @@ Block layout: updates are stored stacked (L, d); the grid walks d in
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = 8 * 128 * 8
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> auto: compiled on TPU, interpreter everywhere else (the
+    interpreter traces the kernel body to plain XLA ops, the CPU fallback)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _buffer_agg_kernel(w_ref, g_ref, u_ref, out_ref):
@@ -28,8 +37,9 @@ def _buffer_agg_kernel(w_ref, g_ref, u_ref, out_ref):
 
 def buffer_agg_pallas(weights: jnp.ndarray, global_vec: jnp.ndarray,
                       updates: jnp.ndarray, *, block: int = DEFAULT_BLOCK,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """weights (L,), global_vec (d,), updates (L, d) -> (d,) f32."""
+    interpret = resolve_interpret(interpret)
     L, d = updates.shape
     n = -(-d // block)
     dp = n * block

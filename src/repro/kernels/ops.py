@@ -1,9 +1,9 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-On this CPU container the kernels execute via ``interpret=True`` (the kernel
-body runs in Python, validating the TPU program logic); on a real TPU set
-``interpret=False``. ``sketch_tree_fused`` is the drop-in accelerated
-version of ``repro.core.sketch.sketch_tree`` applied to the Eq. 8 parts.
+Kernels auto-select their execution mode (``interpret=None``): compiled on
+TPU, interpreter fallback on CPU (the interpreter traces the kernel body to
+plain XLA ops). ``sketch_tree_fused`` is the drop-in accelerated version of
+``repro.core.sketch.sketch_tree`` applied to the Eq. 8 parts.
 """
 from __future__ import annotations
 
@@ -16,15 +16,12 @@ from repro.core import sketch as sk
 from repro.kernels.sens_sketch import sens_sketch_pallas
 from repro.kernels.buffer_agg import buffer_agg_pallas
 
-INTERPRET = jax.default_backend() != "tpu"
-
 
 @functools.partial(jax.jit, static_argnames=("k", "seed", "block"))
 def sens_sketch(theta, g, f, *, k: int = 16, seed: int = 0,
                 block: int = 8 * 128 * 8):
     """Fused Eq. 8 sensitivity + sketch of flat vectors -> (k,) f32."""
-    return sens_sketch_pallas(theta, g, f, k=k, seed=seed, block=block,
-                              interpret=INTERPRET)
+    return sens_sketch_pallas(theta, g, f, k=k, seed=seed, block=block)
 
 
 def sketch_tree_fused(params, grads, fisher, *, k: int = sk.DEFAULT_K,
@@ -36,7 +33,7 @@ def sketch_tree_fused(params, grads, fisher, *, k: int = sk.DEFAULT_K,
     f_leaves = jax.tree_util.tree_leaves(fisher)
     total = jnp.zeros((k,), jnp.float32)
     for i, (p, g, f) in enumerate(zip(p_leaves, g_leaves, f_leaves)):
-        seed_i = int(sk.leaf_seed(seed, i))
+        seed_i = sk.leaf_seed_host(seed, i)  # static, safe under outer jit
         total = total + sens_sketch(p.reshape(-1), g.reshape(-1),
                                     f.reshape(-1), k=k, seed=seed_i)
     return total
@@ -45,4 +42,4 @@ def sketch_tree_fused(params, grads, fisher, *, k: int = sk.DEFAULT_K,
 @jax.jit
 def buffer_agg(weights, global_vec, updates):
     """FedPSA Eq. 20: global + sum_l w_l * update_l over flat vectors."""
-    return buffer_agg_pallas(weights, global_vec, updates, interpret=INTERPRET)
+    return buffer_agg_pallas(weights, global_vec, updates)

@@ -21,10 +21,13 @@ Pallas reduction pattern.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.buffer_agg import resolve_interpret
 
 DEFAULT_BLOCK = 8 * 128 * 8  # 8192 f32 lanes per program
 
@@ -65,13 +68,15 @@ def _sens_sketch_kernel(theta_ref, g_ref, f_ref, out_ref, *, k: int,
 def sens_sketch_pallas(theta: jnp.ndarray, g: jnp.ndarray, f: jnp.ndarray,
                        *, k: int = 16, seed: int = 0,
                        block: int = DEFAULT_BLOCK,
-                       interpret: bool = True) -> jnp.ndarray:
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
     """Fused sensitivity+sketch of FLAT vectors theta/g/f -> (k,) f32.
 
     Inputs are zero-padded to a block multiple (padded entries have s = 0, so
     they contribute nothing regardless of their projection sign). The result
     includes the 1/sqrt(k) JL scale, matching ``repro.core.sketch``.
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     (d,) = theta.shape
     n = -(-d // block)
     dp = n * block

@@ -1,16 +1,20 @@
-"""FedPSA core math vs the paper's equations (Eq. 3-20)."""
+"""FedPSA core math vs the paper's equations (Eq. 3-20).
+
+Property-based (hypothesis) variants of these invariants live in
+``tests/test_property.py`` behind ``pytest.importorskip``; everything here
+runs on a bare pytest install.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import (PSAConfig, aggregate_buffer, cosine, dense_projection,
-                        fisher_diagonal, init_state, init_thermometer,
-                        is_full, psa_weights, push, sensitivity,
-                        sensitivity_from_parts, server_aggregate,
-                        server_receive, sketch_tree, staleness_polynomial,
-                        temperature, uniform_weights)
+from repro.core import (PSAConfig, aggregate_buffer, buffer_full, cosine,
+                        dense_projection, fisher_diagonal, init_state,
+                        init_thermometer, is_full, psa_weights, push,
+                        sensitivity, sensitivity_from_parts, server_aggregate,
+                        server_receive, server_step, sketch_tree,
+                        staleness_polynomial, temperature, uniform_weights)
 from repro.core import psa as psa_lib
 from repro.common import tree as tu
 
@@ -44,31 +48,38 @@ def test_sensitivity_matches_manual_eq8():
 def test_sensitivity_second_order_approximates_zeroing():
     """Eq. 3 ground truth: |F(theta) - F(theta - theta_i e_i)| vs Eq. 8,
     on a quadratic loss where the 2nd-order Taylor expansion is EXACT in the
-    Hessian — the Fisher approximation is the only error source."""
-    key = jax.random.PRNGKey(1)
-    w = jax.random.normal(key, (3, 2)) * 0.5
-    params = {"w": w}
-    x = jax.random.normal(jax.random.fold_in(key, 1), (64, 3))
-    y = x @ jax.random.normal(jax.random.fold_in(key, 2), (3, 2))
-    batch = {"x": x, "y": y}
-    s = np.asarray(sensitivity(_quad_loss, params, batch, num_micro=4)["w"])
-
-    base = float(_quad_loss(params, batch))
-    true = np.zeros_like(s)
-    for i in range(3):
-        for j in range(2):
-            wz = np.asarray(w).copy()
-            wz[i, j] = 0.0
-            true[i, j] = abs(base - float(_quad_loss({"w": jnp.asarray(wz)}, batch)))
-    # rank correlation: the approximation must order parameters like the truth
+    Hessian — the empirical-Fisher approximation is the only error source.
+    Evaluated near the optimum (the regime the paper's sensitivity targets)
+    and averaged across seeds: a 6-point rank correlation is too coarse to
+    assert on a single draw."""
     def rank(a):
         order = np.argsort(a.ravel())
         r = np.empty_like(order)
         r[order] = np.arange(len(order))
         return r
-    rs, rt = rank(s), rank(true)
-    corr = np.corrcoef(rs, rt)[0, 1]
-    assert corr > 0.8, f"rank corr {corr}"
+
+    corrs = []
+    for seed in range(8):
+        key = jax.random.PRNGKey(seed)
+        w_true = jax.random.normal(jax.random.fold_in(key, 2), (3, 2))
+        w = w_true + 0.3 * jax.random.normal(key, (3, 2))
+        params = {"w": w}
+        x = jax.random.normal(jax.random.fold_in(key, 1), (64, 3))
+        batch = {"x": x, "y": x @ w_true}
+        s = np.asarray(sensitivity(_quad_loss, params, batch, num_micro=4)["w"])
+
+        base = float(_quad_loss(params, batch))
+        true = np.zeros_like(s)
+        for i in range(3):
+            for j in range(2):
+                wz = np.asarray(w).copy()
+                wz[i, j] = 0.0
+                true[i, j] = abs(
+                    base - float(_quad_loss({"w": jnp.asarray(wz)}, batch)))
+        corrs.append(np.corrcoef(rank(s), rank(true))[0, 1])
+    # the approximation must order parameters like the truth, on average
+    assert np.mean(corrs) > 0.7, corrs
+    assert min(corrs) > 0.3, corrs
 
 
 def test_sketch_equals_dense_projection():
@@ -82,15 +93,14 @@ def test_sketch_equals_dense_projection():
         np.testing.assert_allclose(np.asarray(y), R @ flat, rtol=1e-4, atol=1e-4)
 
 
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=30, deadline=None)
-def test_cosine_bounds(seed):
-    rng = np.random.RandomState(seed % 100000)
-    a = jnp.asarray(rng.randn(16).astype(np.float32))
-    b = jnp.asarray(rng.randn(16).astype(np.float32))
-    c = float(cosine(a, b))
-    assert -1.0001 <= c <= 1.0001
-    assert abs(float(cosine(a, a)) - 1.0) < 1e-5
+def test_cosine_bounds():
+    for seed in range(20):
+        rng = np.random.RandomState(seed)
+        a = jnp.asarray(rng.randn(16).astype(np.float32))
+        b = jnp.asarray(rng.randn(16).astype(np.float32))
+        c = float(cosine(a, b))
+        assert -1.0001 <= c <= 1.0001
+        assert abs(float(cosine(a, a)) - 1.0) < 1e-5
 
 
 def test_jl_cosine_preservation():
@@ -122,16 +132,17 @@ def test_thermometer_eq16_18():
     assert abs(float(temperature(st_, 5.0, 0.5)) - (0.25 * 5 + 0.5)) < 1e-6
 
 
-@given(st.lists(st.floats(-1, 1, width=32), min_size=2, max_size=8),
-       st.floats(0.125, 20.0, width=32))
-@settings(max_examples=50, deadline=None)
-def test_psa_weights_simplex(kappas, temp):
-    w = np.asarray(psa_weights(jnp.asarray(kappas, jnp.float32), jnp.float32(temp)))
-    assert abs(w.sum() - 1.0) < 1e-4
-    assert (w >= 0).all()
-    # monotone: higher kappa never gets lower weight
-    order = np.argsort(kappas)
-    assert (np.diff(w[order]) >= -1e-6).all()
+def test_psa_weights_simplex():
+    for seed in range(20):
+        rng = np.random.RandomState(seed)
+        kappas = rng.uniform(-1, 1, size=rng.randint(2, 9)).astype(np.float32)
+        temp = float(rng.uniform(0.125, 20.0))
+        w = np.asarray(psa_weights(jnp.asarray(kappas), jnp.float32(temp)))
+        assert abs(w.sum() - 1.0) < 1e-4
+        assert (w >= 0).all()
+        # monotone: higher kappa never gets lower weight
+        order = np.argsort(kappas)
+        assert (np.diff(w[order]) >= -1e-6).all()
 
 
 def test_temperature_sharpens_weights():
@@ -145,24 +156,75 @@ def test_temperature_sharpens_weights():
 
 def test_algorithm1_uniform_until_queue_full():
     cfg = PSAConfig(buffer_size=2, queue_len=6)
-    state = init_state(cfg)
-    state.global_sketch = jnp.ones(cfg.sketch_k)
-    params = {"w": jnp.zeros((3,))}
+    d = 3
+    state = init_state(cfg, d, jnp.ones(cfg.sketch_k))
+    params = jnp.zeros((d,))
     infos = []
     for i in range(6):  # 3 aggregations x buffer 2 = 6 receives = queue fills
-        upd = {"w": jnp.full((3,), 0.1 * (i + 1))}
+        upd = jnp.full((d,), 0.1 * (i + 1))
         sk = jnp.ones(cfg.sketch_k) * (1.0 if i % 2 == 0 else -1.0)
-        server_receive(state, upd, sk)
-        if len(state.buffer) >= cfg.buffer_size:
-            params, info = server_aggregate(state, params)
+        state = server_receive(state, upd, sk)
+        if bool(buffer_full(state)):
+            state, params, info = server_aggregate(state, params, cfg)
             infos.append(info)
     # first aggregations: queue not yet full -> uniform
-    np.testing.assert_allclose(np.asarray(infos[0]["weights"]), [0.5, 0.5], atol=1e-6)
-    assert infos[0]["temp"] is None
+    np.testing.assert_allclose(np.asarray(infos[0].weights), [0.5, 0.5], atol=1e-6)
+    assert not bool(infos[0].temp_valid)
     # last aggregation: queue full -> temperature softmax, kappa +1 vs -1
-    assert infos[-1]["temp"] is not None
-    w = np.asarray(infos[-1]["weights"])
+    assert bool(infos[-1].temp_valid) and float(infos[-1].temp) > 0
+    w = np.asarray(infos[-1].weights)
     assert w[0] > w[1]  # kappa=+1 entry outweighs kappa=-1
+
+
+def test_psa_stacked_ring_buffer_semantics():
+    """The (L_s, d) stacked buffer behaves as a ring: slot j of push n lands
+    at n % L_s, the fill count tracks receives and resets on aggregation."""
+    cfg = PSAConfig(buffer_size=3, queue_len=8)
+    d = 4
+    state = init_state(cfg, d, jnp.ones(cfg.sketch_k))
+    updates = [jnp.full((d,), float(i + 1)) for i in range(5)]
+    for i, u in enumerate(updates[:2]):
+        state = server_receive(state, u, jnp.ones(cfg.sketch_k))
+        assert int(state.count) == i + 1
+        assert not bool(buffer_full(state))
+        np.testing.assert_allclose(np.asarray(state.buffer[i]), np.asarray(u))
+    state = server_receive(state, updates[2], jnp.ones(cfg.sketch_k))
+    assert bool(buffer_full(state))
+    state, _, _ = server_aggregate(state, jnp.zeros((d,)), cfg)
+    assert int(state.count) == 0
+    # next cycle overwrites slots starting at 0 (implicit clear)
+    state = server_receive(state, updates[3], jnp.ones(cfg.sketch_k))
+    np.testing.assert_allclose(np.asarray(state.buffer[0]),
+                               np.asarray(updates[3]))
+    assert int(state.thermo.count) == 4  # thermometer tracks ALL receives
+
+
+def test_fused_server_step_matches_two_phase():
+    """server_step (lax.cond fused) == server_receive + server_aggregate."""
+    cfg = PSAConfig(buffer_size=2, queue_len=4)
+    d = 6
+    rng = np.random.RandomState(3)
+    sketches = [jnp.asarray(rng.randn(cfg.sketch_k), jnp.float32)
+                for _ in range(8)]
+    updates = [jnp.asarray(rng.randn(d) * 0.1, jnp.float32) for _ in range(8)]
+
+    gs = jnp.asarray(rng.randn(cfg.sketch_k), jnp.float32)
+    s_a = init_state(cfg, d, gs)
+    s_b = init_state(cfg, d, gs)
+    g_a = jnp.zeros((d,))
+    g_b = jnp.zeros((d,))
+    fused = jax.jit(lambda st, g, u, sk: server_step(st, g, u, sk, cfg))
+    for u, sk in zip(updates, sketches):
+        s_a, g_a, info = fused(s_a, g_a, u, sk)
+        s_b = server_receive(s_b, u, sk)
+        if bool(buffer_full(s_b)):
+            s_b, g_b, _ = server_aggregate(s_b, g_b, cfg)
+            assert bool(info.updated)
+        else:
+            assert not bool(info.updated)
+        np.testing.assert_allclose(np.asarray(g_a), np.asarray(g_b),
+                                   rtol=1e-6, atol=1e-6)
+    assert int(s_a.count) == int(s_b.count)
 
 
 def test_staleness_polynomial_decreasing():

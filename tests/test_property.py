@@ -1,0 +1,78 @@
+"""Property-based invariants (hypothesis). The whole module is skipped on
+environments without ``hypothesis`` (``pip install -r requirements-dev.txt``
+restores it) — the deterministic variants in ``test_core_psa.py`` keep the
+invariants covered on a bare install."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PSAConfig, buffer_full, cosine, init_state,
+                        psa_weights, server_aggregate, server_receive)
+from repro.data import dirichlet_partition, make_classification
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_cosine_bounds(seed):
+    rng = np.random.RandomState(seed % 100000)
+    a = jnp.asarray(rng.randn(16).astype(np.float32))
+    b = jnp.asarray(rng.randn(16).astype(np.float32))
+    c = float(cosine(a, b))
+    assert -1.0001 <= c <= 1.0001
+    assert abs(float(cosine(a, a)) - 1.0) < 1e-5
+
+
+@given(st.lists(st.floats(-1, 1, width=32), min_size=2, max_size=8),
+       st.floats(0.125, 20.0, width=32))
+@settings(max_examples=50, deadline=None)
+def test_psa_weights_simplex(kappas, temp):
+    w = np.asarray(psa_weights(jnp.asarray(kappas, jnp.float32), jnp.float32(temp)))
+    assert abs(w.sum() - 1.0) < 1e-4
+    assert (w >= 0).all()
+    # monotone: higher kappa never gets lower weight
+    order = np.argsort(kappas)
+    assert (np.diff(w[order]) >= -1e-6).all()
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_partition_min_size(seed):
+    ds = make_classification(1000, 5, 8, seed=seed % 17)
+    parts = dirichlet_partition(ds, 10, alpha=0.1, seed=seed, min_size=2)
+    assert min(len(p) for p in parts) >= 2
+
+
+@given(st.integers(2, 6), st.integers(1, 20), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_psa_ring_buffer_property(buffer_size, n_pushes, seed):
+    """Stacked-ring invariant: after any receive/aggregate interleaving, slot
+    ``j`` holds the most recent update whose in-cycle index was ``j``, the
+    fill count equals receives since the last flush, and the thermometer
+    counts every receive."""
+    rng = np.random.RandomState(seed % 100000)
+    cfg = PSAConfig(buffer_size=buffer_size, queue_len=50)
+    d = 5
+    state = init_state(cfg, d, jnp.ones(cfg.sketch_k))
+    params = jnp.zeros((d,))
+    expected = {}  # slot -> latest update written there
+    fill = 0
+    for i in range(n_pushes):
+        u = jnp.asarray(rng.randn(d).astype(np.float32))
+        state = server_receive(state, u, jnp.ones(cfg.sketch_k))
+        expected[fill % buffer_size] = np.asarray(u)
+        fill += 1
+        assert int(state.count) == fill
+        for slot, want in expected.items():
+            np.testing.assert_allclose(np.asarray(state.buffer[slot]), want,
+                                       rtol=1e-6)
+        assert bool(buffer_full(state)) == (fill >= buffer_size)
+        if bool(buffer_full(state)):
+            state, params, info = server_aggregate(state, params, cfg)
+            fill = 0
+            assert int(state.count) == 0
+            assert abs(float(np.sum(np.asarray(info.weights))) - 1.0) < 1e-4
+    assert int(state.thermo.count) == n_pushes
+    assert np.all(np.isfinite(np.asarray(params)))

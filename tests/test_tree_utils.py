@@ -1,9 +1,8 @@
-"""Pytree arithmetic: unit + hypothesis property tests."""
+"""Pytree arithmetic: unit + seeded property tests (hypothesis-free)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.common import tree as tu
 
@@ -13,47 +12,39 @@ def _tree(vals):
     return {"x": jnp.asarray(a), "y": {"z": jnp.asarray(b), "w": jnp.asarray(c)}}
 
 
-@st.composite
-def tree_pair(draw):
-    shape = draw(st.sampled_from([(3,), (2, 4), (1,), (5, 2)]))
-    def arr():
-        return draw(st.lists(st.floats(-100, 100, width=32),
-                             min_size=int(np.prod(shape)),
-                             max_size=int(np.prod(shape)))), shape
-    def mk():
-        vals = []
-        for _ in range(3):
-            v, s = arr()
-            vals.append(np.asarray(v, np.float32).reshape(s))
-        return _tree(vals)
-    return mk(), mk()
+def _tree_pairs(n=25):
+    shapes = [(3,), (2, 4), (1,), (5, 2)]
+    for seed in range(n):
+        rng = np.random.RandomState(seed)
+        shape = shapes[seed % len(shapes)]
+
+        def mk():
+            return _tree([rng.uniform(-100, 100, shape).astype(np.float32)
+                          for _ in range(3)])
+
+        yield mk(), mk(), rng
 
 
-@given(tree_pair())
-@settings(max_examples=25, deadline=None)
-def test_add_sub_roundtrip(pair):
-    a, b = pair
-    back = tu.tree_sub(tu.tree_add(a, b), b)
-    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(back)):
-        np.testing.assert_allclose(la, lb, rtol=1e-4, atol=1e-4)
+def test_add_sub_roundtrip():
+    for a, b, _ in _tree_pairs():
+        back = tu.tree_sub(tu.tree_add(a, b), b)
+        for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(back)):
+            np.testing.assert_allclose(la, lb, rtol=1e-4, atol=1e-4)
 
 
-@given(tree_pair(), st.floats(-10, 10, width=32))
-@settings(max_examples=25, deadline=None)
-def test_axpy_matches_scale_add(pair, alpha):
-    x, y = pair
-    got = tu.tree_axpy(alpha, x, y)
-    want = tu.tree_add(tu.tree_scale(x, alpha), y)
-    for la, lb in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(want)):
-        np.testing.assert_allclose(la, lb, rtol=1e-4, atol=1e-4)
+def test_axpy_matches_scale_add():
+    for x, y, rng in _tree_pairs():
+        alpha = float(rng.uniform(-10, 10))
+        got = tu.tree_axpy(alpha, x, y)
+        want = tu.tree_add(tu.tree_scale(x, alpha), y)
+        for la, lb in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(want)):
+            np.testing.assert_allclose(la, lb, rtol=1e-4, atol=1e-4)
 
 
-@given(tree_pair())
-@settings(max_examples=25, deadline=None)
-def test_sq_norm_equals_self_dot(pair):
-    a, _ = pair
-    np.testing.assert_allclose(float(tu.tree_sq_norm(a)),
-                               float(tu.tree_dot(a, a)), rtol=1e-5)
+def test_sq_norm_equals_self_dot():
+    for a, _, _ in _tree_pairs():
+        np.testing.assert_allclose(float(tu.tree_sq_norm(a)),
+                                   float(tu.tree_dot(a, a)), rtol=1e-5)
 
 
 def test_weighted_sum_matches_manual():
