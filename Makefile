@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-smoke bench
+.PHONY: test test-fast bench-smoke bench bench-sim
 
 test:
 	$(PY) -m pytest -x -q
@@ -14,6 +14,12 @@ test-fast:
 # including BENCH_server_step.json (legacy ingest vs fused jitted step).
 bench-smoke:
 	$(PY) -m benchmarks.kernel_micro
+
+# Simulator dispatch throughput: legacy per-client loop vs the cohort
+# engine; writes artifacts/bench/BENCH_sim_throughput.json. Narrow with
+# e.g. SIM_BENCH_CLIENTS=50,500.
+bench-sim:
+	$(PY) -m benchmarks.sim_throughput
 
 bench:
 	$(PY) -m benchmarks.run

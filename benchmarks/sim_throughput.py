@@ -1,0 +1,122 @@
+"""Simulator dispatch throughput: legacy per-client loop vs cohort engine.
+
+The point of the cohort refactor: simulated wall-clock should be bounded by
+device math, not per-dispatch python/jit overhead. This benchmark runs the
+same async world (fedasync, uniform clients) under both engines and reports
+dispatches/second at C in {50, 500, 5000} synthetic clients. Horizons are
+scaled so each cell processes a comparable number of dispatches; a warmup
+run populates the jit caches so compile time is not billed to either engine.
+
+Writes artifacts/bench/BENCH_sim_throughput.json. Acceptance gate (ISSUE 2):
+cohort >= 5x legacy at C=500. Override the client counts with
+SIM_BENCH_CLIENTS=50,500 (comma-separated) for a quick smoke run.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import ClientDataset, make_classification
+from repro.federated import SimConfig, run_async
+from repro.models import model as model_lib
+from benchmarks import common
+
+# Paper-protocol local work: E=5 epochs over each client's shard. 192
+# samples at batch 16 = 12 batches/epoch -> 60 local SGD steps per dispatch,
+# the regime where the legacy loop pays 60 per-batch jit dispatches + host
+# batch copies while the cohort engine runs one fused scan.
+SAMPLES_PER_CLIENT = 192
+BATCH_SIZE = 16
+LOCAL_EPOCHS = 5
+LATENCY_LO, LATENCY_HI = 100.0, 500.0
+TARGET_DISPATCHES = 150  # per timed run, roughly, at every C
+
+
+def build_world(num_clients: int, seed: int = 0):
+    cfg = get_config("paper-synthetic-mlp")
+    n = num_clients * SAMPLES_PER_CLIENT
+    full = make_classification(n + 1000, cfg.num_classes, dim=cfg.input_hw[0],
+                               seed=seed, class_sep=0.7)
+    test = full.subset(np.arange(n, n + 1000))
+    clients = [
+        ClientDataset(full.subset(np.arange(c * SAMPLES_PER_CLIENT,
+                                            (c + 1) * SAMPLES_PER_CLIENT)))
+        for c in range(num_clients)
+    ]
+    params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
+    return cfg, clients, test, params
+
+
+def sim_for(num_clients: int, horizon: float, engine: str) -> SimConfig:
+    return SimConfig(
+        num_clients=num_clients, concurrency=0.2, local_epochs=LOCAL_EPOCHS,
+        batch_size=BATCH_SIZE, horizon=horizon, eval_every=horizon,
+        latency_kind="uniform", latency_lo=LATENCY_LO, latency_hi=LATENCY_HI,
+        seed=0, eval_batches=2, engine=engine)
+
+
+def horizon_for(num_clients: int, target: int) -> float:
+    """Horizon putting ~target dispatches through the heap: the steady-state
+    completion rate is concurrency / mean_latency per client."""
+    mean_lat = 0.5 * (LATENCY_LO + LATENCY_HI)
+    rate = 0.2 * num_clients / mean_lat
+    return max(target / rate, 2.0 * LATENCY_HI)
+
+
+def bench_cell(num_clients: int) -> dict:
+    cfg, clients, test, params = build_world(num_clients)
+    horizon = horizon_for(num_clients, TARGET_DISPATCHES)
+    cell = {"num_clients": num_clients, "horizon": horizon}
+    for engine in ("sequential", "cohort"):
+        sim = sim_for(num_clients, horizon, engine)
+        # full-length warmup: identical run, so every wave/chunk bucket the
+        # timed run hits is already compiled for both engines
+        run_async("fedasync", cfg, params, clients, test, sim)
+        t0 = time.perf_counter()
+        res = run_async("fedasync", cfg, params, clients, test, sim)
+        wall = time.perf_counter() - t0
+        cell[engine] = {
+            "dispatches": res.dispatches,
+            "wall_s": wall,
+            "dispatches_per_s": res.dispatches / wall,
+            "cohorts": res.cohorts,
+            "mean_cohort_size": (res.dispatches / res.cohorts
+                                 if res.cohorts else 1.0),
+            "final_accuracy": res.final_accuracy,
+        }
+        print(f"sim_throughput,C={num_clients},engine={engine},"
+              f"dispatches={res.dispatches},wall_s={wall:.2f},"
+              f"dps={res.dispatches / wall:.2f}", flush=True)
+    cell["speedup"] = (cell["cohort"]["dispatches_per_s"]
+                       / cell["sequential"]["dispatches_per_s"])
+    print(f"sim_throughput,C={num_clients},speedup={cell['speedup']:.2f}x",
+          flush=True)
+    return cell
+
+
+def main(argv=None):
+    counts = os.environ.get("SIM_BENCH_CLIENTS", "50,500,5000")
+    cells = [bench_cell(int(c)) for c in counts.split(",")]
+    payload = {
+        "model": "paper-synthetic-mlp",
+        "local_steps_per_dispatch": LOCAL_EPOCHS * (SAMPLES_PER_CLIENT // BATCH_SIZE),
+        "backend": jax.default_backend(),
+        "cells": cells,
+    }
+    path = common.save("BENCH_sim_throughput", payload)
+    print(f"wrote {path}")
+    gate = [c for c in cells if c["num_clients"] == 500]
+    if gate and gate[0]["speedup"] < 5.0:
+        print(f"WARNING: speedup at C=500 is {gate[0]['speedup']:.2f}x < 5x",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,11 @@ def main(argv=None):
     for name, c in curves.items():
         t = np.asarray(c["times"])
         a = np.asarray(c["accuracies"])
-        aulc = float(np.trapezoid(a, t) / 86_400.0)
+        # Same convention as SimResult.aulc: normalize by the run's actual
+        # span, so the number is mean accuracy over the run regardless of
+        # horizon.
+        span = float(t[-1] - t[0]) if len(t) > 1 else 0.0
+        aulc = float(np.trapezoid(a, t) / span) if span > 0.0 else 0.0
         rows[name] = aulc
         print(f"t3,{name},{aulc:.4f}")
     common.save("t3_aulc", rows)

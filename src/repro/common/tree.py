@@ -135,6 +135,18 @@ class FlatSpec:
         self.offsets = tuple(np.cumsum((0,) + self.sizes)[:-1].tolist())
         self.size = int(sum(self.sizes))
 
+    # Two specs of the same layout are interchangeable, so they compare (and
+    # hash) by layout. This is what lets jit-compiled artifacts built around
+    # a spec be cached across runs that each construct their own FlatSpec.
+    def _sig(self):
+        return (self.treedef, self.shapes, self.dtypes)
+
+    def __eq__(self, other):
+        return isinstance(other, FlatSpec) and self._sig() == other._sig()
+
+    def __hash__(self):
+        return hash(self._sig())
+
     def flatten(self, tree) -> jnp.ndarray:
         """Tree -> contiguous (d,) f32 vector (jit-friendly)."""
         leaves = jax.tree_util.tree_leaves(tree)
@@ -149,3 +161,17 @@ class FlatSpec:
                                        self.shapes, self.dtypes)
         ]
         return jax.tree_util.tree_unflatten(self.treedef, out)
+
+
+_JIT_UNFLATTEN_CACHE = {}
+
+
+def jit_unflatten(spec: "FlatSpec"):
+    """Jitted ``spec.unflatten`` shared by every spec with the same layout —
+    repeated runs reuse one compiled program instead of recompiling a fresh
+    per-run closure."""
+    fn = _JIT_UNFLATTEN_CACHE.get(spec)
+    if fn is None:
+        fn = jax.jit(spec.unflatten)
+        _JIT_UNFLATTEN_CACHE[spec] = fn
+    return fn

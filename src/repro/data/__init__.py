@@ -6,4 +6,5 @@ from repro.data.synthetic import (
 )
 from repro.data.partition import dirichlet_partition, iid_partition
 from repro.data.calibration import make_calibration_batch
-from repro.data.loader import ClientDataset, batch_iterator
+from repro.data.loader import (ClientDataset, StackedClients, batch_iterator,
+                               epoch_batch_indices)

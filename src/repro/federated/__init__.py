@@ -5,8 +5,11 @@ from repro.federated.simulator import (
     run_async,
     run_fedavg,
     make_sketch_fn,
+    make_sketch_fn_flat,
     ALGORITHMS,
+    ENGINES,
 )
+from repro.federated.cohort import CohortEngine
 from repro.federated.servers import make_server, PolicyServer
 from repro.federated.policies import (
     Arrival,
@@ -18,4 +21,6 @@ from repro.federated.policies import (
 )
 from repro.federated.legacy import make_legacy_server
 from repro.federated.client import local_update
-from repro.federated.latency import make_latency_sampler, per_client_latency
+from repro.federated.latency import (make_latency_sampler,
+                                     per_client_availability,
+                                     per_client_latency)

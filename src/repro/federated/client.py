@@ -43,7 +43,7 @@ from repro.common.sharding import SINGLE_DEVICE_RULES as _RULES
 
 
 def _get_step(cfg: ModelConfig, prox: float, align: float):
-    key = (cfg.name, prox, align)
+    key = (cfg, prox, align)
     if key not in _STEP_CACHE:
         loss = _loss_for(cfg, prox, align)
 

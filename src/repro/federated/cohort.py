@@ -1,0 +1,195 @@
+"""Device-resident cohort client engine: vmapped local training.
+
+The legacy client path (``client.local_update``) runs E epochs as a python
+loop of per-batch jit calls on pytrees — every simulated dispatch pays
+O(epochs * batches) device-call overhead plus a pytree snapshot. This module
+replaces it with ONE compiled call per *cohort*: all clients whose
+completions drain together train simultaneously via ``vmap`` over the cohort
+axis and ``lax.scan`` over their local SGD steps, operating directly on the
+flat ``(d,)`` parameter layout from ``common.tree.FlatSpec`` (no pytree
+unflatten on the host — ``spec.unflatten`` happens inside the traced loss).
+
+Data lives on device once, as a padded ``(C, n_max, ...)`` slab
+(``data.loader.StackedClients``); batch schedules come from the same
+``epoch_batch_indices`` stream the legacy iterator uses, so the engine
+reproduces the per-client loop's arithmetic to float tolerance — ragged
+client sizes are handled by masking batch tails inside the loss, and padded
+scan steps / padded cohort rows are exact no-ops.
+
+FedProx (``prox``) and FedPAC (``align``) fold in as static config: the
+proximal/alignment pulls are plain vector arithmetic on the flat layout
+(the classifier head becomes a precomputed 0/1 mask over flat offsets).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import tree as tu
+from repro.data.loader import StackedClients, epoch_batch_indices
+from repro.federated.client import _head
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+_RUN_CACHE = {}
+
+
+class CohortEngine:
+    """One compiled local-training step for a whole cohort.
+
+    Built once per (model, stacked data, epochs, batch_size, prox, align);
+    ``cohort_update`` then costs one device call per cohort. Cohort sizes are
+    bucketed to powers of two and scan length is fixed at the global maximum,
+    so the jit cache holds O(log C) programs, not one per cohort shape.
+    """
+
+    def __init__(self, cfg: ModelConfig, stacked: StackedClients,
+                 spec: tu.FlatSpec, template_params, *,
+                 local_epochs: int = 5, batch_size: int = 64,
+                 prox: float = 0.0, align: float = 0.0):
+        assert cfg.family in ("cnn", "mlp"), \
+            f"cohort engine trains the paper's cnn/mlp families, not {cfg.family}"
+        self.cfg = cfg
+        self.spec = spec
+        self.local_epochs = int(local_epochs)
+        self.batch_size = int(batch_size)
+        self.prox = float(prox)
+        self.align = float(align)
+        self.sizes = np.asarray(stacked.sizes, np.int64)
+        self.x = jnp.asarray(stacked.x)
+        self.y = jnp.asarray(stacked.y)
+        # Per-client steps/epoch under the drop-last rule; the scan runs the
+        # global max and masks the tail (a masked step is an exact no-op).
+        bs_c = np.minimum(self.batch_size, self.sizes)
+        self.steps_per_client = (self.local_epochs * (self.sizes // bs_c)).astype(int)
+        self.num_steps = int(self.steps_per_client.max())
+        self.bs_pad = int(bs_c.max())
+        # Compiled step shared across engine instances (a fresh engine per
+        # run would otherwise retrace; mirrors client._STEP_CACHE). The key
+        # pins everything _build closes over: the model (which fixes the
+        # flat layout) and the static loss variant.
+        key = (cfg, spec, self.prox, self.align)
+        if key not in _RUN_CACHE:
+            _RUN_CACHE[key] = self._build(cfg, spec, self.prox, self.align)
+        self._run = _RUN_CACHE[key]
+
+    # -- compiled core ------------------------------------------------------
+
+    @staticmethod
+    def _build(cfg, spec, prox, align):
+        forward = (model_lib.cnn_forward if cfg.family == "cnn"
+                   else model_lib.mlp_forward)
+
+        def member(x_all, y_all, p0_flat, cid, idx, valid, counts, lr_steps):
+            xs = x_all[cid]          # (n_max, ...) this member's data
+            ys = y_all[cid]
+            # The scan carries the params *pytree*: unflatten/flatten happen
+            # once at the boundary, not (with their grad-transpose scatters)
+            # inside every local step — the per-step program stays the same
+            # op sequence the legacy per-batch jit ran.
+            anchor = spec.unflatten(p0_flat)
+
+            def loss(p, xb, yb, vm, cnt):
+                logits = forward(p, xb, cfg).astype(jnp.float32)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+                base = jnp.sum((lse - gold) * vm) / cnt
+                if prox > 0.0:
+                    base = base + 0.5 * prox * tu.tree_sq_norm(
+                        tu.tree_sub(p, anchor))
+                if align > 0.0:
+                    base = base + 0.5 * align * tu.tree_sq_norm(
+                        tu.tree_sub(_head(p), _head(anchor)))
+                return base
+
+            grad = jax.grad(loss)
+
+            # vm (f32 tail mask), cnt (= max(sum(vm), 1)) and lr_t (member lr,
+            # 0 on padded steps) are host-precomputed so the compiled step
+            # carries no mask bookkeeping; a padded step has finite g (safe
+            # denominator) and lr_t = 0 — an exact no-op.
+            def body(p, sl):
+                bi, vm, cnt, lr_t = sl
+                g = grad(p, xs[bi], ys[bi], vm, cnt)
+                p = jax.tree_util.tree_map(lambda a, b: a - lr_t * b, p, g)
+                return p, None
+
+            p, _ = jax.lax.scan(body, anchor, (idx, valid, counts, lr_steps))
+            return spec.flatten(p)
+
+        @jax.jit
+        def run(x_all, y_all, params_stack, cids, idx, valid, counts,
+                lr_steps):
+            w = jax.vmap(member, in_axes=(None, None, 0, 0, 0, 0, 0, 0))(
+                x_all, y_all, params_stack, cids, idx, valid, counts,
+                lr_steps)
+            return w - params_stack, w
+
+        return run
+
+    # -- host driver --------------------------------------------------------
+
+    def _schedules(self, cids: np.ndarray, seeds: np.ndarray):
+        """Batch schedules for a cohort, padded to the engine's fixed
+        (num_steps, bs_pad) frame. Same RandomState stream as the legacy
+        ``ClientDataset.epochs`` iterator. Returns (idx, valid f32 masks,
+        counts = per-step valid totals clamped to >= 1, nvalid per-step raw
+        totals for lr gating)."""
+        B = len(cids)
+        idx = np.zeros((B, self.num_steps, self.bs_pad), np.int32)
+        valid = np.zeros((B, self.num_steps, self.bs_pad), np.float32)
+        nvalid = np.zeros((B, self.num_steps), np.float32)
+        for i, (c, s) in enumerate(zip(cids, seeds)):
+            sched = epoch_batch_indices(int(self.sizes[c]), self.local_epochs,
+                                        self.batch_size, int(s))
+            st, bs = sched.shape
+            idx[i, :st, :bs] = sched
+            valid[i, :st, :bs] = 1.0
+            nvalid[i, :st] = bs
+        counts = np.maximum(nvalid, 1.0)
+        return idx, valid, counts, nvalid
+
+    def cohort_update(self, params_stack: jnp.ndarray, cids: Sequence[int],
+                      lrs: Sequence[float], seeds: Sequence[int]
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Train the cohort; returns (deltas, new_params), both (B, d).
+
+        ``params_stack`` holds each member's dispatch snapshot (its anchor
+        for prox/align); ``lrs``/``seeds`` are per-member, matching what the
+        legacy loop would have used for that dispatch.
+        """
+        B = int(params_stack.shape[0])
+        assert B >= 1
+        cids = np.asarray(cids, np.int32)
+        idx, valid, counts, nvalid = self._schedules(cids, np.asarray(seeds))
+        # per-(member, step) learning rate: the member's lr on real steps,
+        # 0 on padded steps (making them exact no-ops)
+        lr_steps = (np.asarray(lrs, np.float64)[:, None]
+                    * (nvalid > 0.0)).astype(np.float32)
+        # bucket to multiples of 4: bounds the jit cache at max_cohort/4
+        # programs while wasting at most 3 padded members' compute (padded
+        # rows are masked no-ops but still execute their local steps)
+        Bp = -(-B // 4) * 4
+        if Bp > B:
+            pad = Bp - B
+
+            def padded(a):
+                return np.concatenate(
+                    [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+
+            params_stack = jnp.concatenate(
+                [params_stack, jnp.zeros((pad, params_stack.shape[1]),
+                                         params_stack.dtype)])
+            cids, idx, valid, lr_steps = map(padded,
+                                             (cids, idx, valid, lr_steps))
+            counts = np.concatenate(
+                [counts, np.ones((pad,) + counts.shape[1:], counts.dtype)])
+        deltas, w = self._run(self.x, self.y, params_stack,
+                              jnp.asarray(cids), jnp.asarray(idx),
+                              jnp.asarray(valid), jnp.asarray(counts),
+                              jnp.asarray(lr_steps))
+        return deltas[:B], w[:B]

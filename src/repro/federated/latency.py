@@ -1,8 +1,14 @@
-"""Client response-time distributions (paper §6.2 system heterogeneity).
+"""Client response-time and availability models (paper §6.2 heterogeneity).
 
-Uniform(lo, hi) and a long-tail distribution over the same support (most
-clients near ``lo``, a heavy tail toward ``hi`` — the paper notes long-tail
-response times cluster around the minimum).
+Latency: Uniform(lo, hi) and a long-tail distribution over the same support
+(most clients near ``lo``, a heavy tail toward ``hi`` — the paper notes
+long-tail response times cluster around the minimum).
+
+Availability: FLGo-style intermittent clients — each dispatch succeeds with
+a per-client probability; a failed dispatch still occupies its concurrency
+slot for the full response time (the server only learns about the dropout
+when the reply fails to arrive) and is then re-dispatched. ``SimConfig``
+plumbs this through as ``availability_kind`` / ``dropout_rate``.
 """
 from __future__ import annotations
 
@@ -37,3 +43,45 @@ def per_client_latency(kind: str, lo: float, hi: float, num_clients: int,
         return float(np.clip(means[client_id] * jitter, lo, hi))
 
     return sample, means
+
+
+AVAILABILITY_KINDS = ("always", "uniform", "hetero", "slow-fragile")
+
+
+def per_client_availability(kind: str, dropout_rate: float, num_clients: int,
+                            seed: int = 0,
+                            latency_means=None) -> np.ndarray:
+    """Per-client probability that a dispatch completes successfully.
+
+    ``always``        every dispatch succeeds (dropout disabled)
+    ``uniform``       every client succeeds w.p. 1 - dropout_rate
+    ``hetero``        per-client Beta-distributed success probs with mean
+                      1 - dropout_rate — some clients are chronically flaky
+                      (FLGo's intermittently-available population)
+    ``slow-fragile``  dropout concentrated on the slowest clients (success
+                      prob decays with the client's mean latency) — couples
+                      system heterogeneity to availability, the adversarial
+                      case for staleness policies
+    """
+    if kind == "always" or dropout_rate <= 0.0:
+        return np.ones(num_clients)
+    if not 0.0 < dropout_rate < 1.0:
+        raise ValueError(f"dropout_rate must be in (0, 1), got {dropout_rate}")
+    rng = np.random.RandomState(seed + 0x5EED)
+    if kind == "uniform":
+        return np.full(num_clients, 1.0 - dropout_rate)
+    if kind == "hetero":
+        # Beta(a, b) with mean 1-rate and fixed concentration a+b=8
+        conc = 8.0
+        a = conc * (1.0 - dropout_rate)
+        return rng.beta(a, conc - a, size=num_clients)
+    if kind == "slow-fragile":
+        if latency_means is None:
+            raise ValueError("slow-fragile availability needs latency_means")
+        m = np.asarray(latency_means, np.float64)
+        rank = (m - m.min()) / max(m.max() - m.min(), 1e-12)
+        # fastest client ~always available; slowest drops at 2x the mean rate
+        p = 1.0 - dropout_rate * 2.0 * rank
+        return np.clip(p, 0.05, 1.0)
+    raise ValueError(f"unknown availability kind {kind!r}; "
+                     f"known: {AVAILABILITY_KINDS}")

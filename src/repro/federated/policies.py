@@ -91,6 +91,10 @@ class Policy:
     init: Callable[[Any], ServerState]           # params pytree -> state
     step: Callable[[ServerState, Arrival], Tuple[ServerState, StepInfo]]
     spec: tu.FlatSpec                            # flat <-> pytree layout
+    # the unjitted step — what batched ingest scans over (wave of arrivals
+    # as one device call); ``step`` is jit_step(raw_step)
+    raw_step: Optional[Callable[[ServerState, Arrival],
+                                Tuple[ServerState, StepInfo]]] = None
     sketch_k: int = 0
     needs_sketch: bool = False
     client_align: float = 0.0
@@ -159,7 +163,7 @@ def fedasync_policy(spec: tu.FlatSpec, alpha: float = 0.6,
         return state, make_info(0, updated=True, mix=s)
 
     return Policy(name="fedasync", init=lambda p: base_state(spec, p),
-                  step=jit_step(step), spec=spec, log_fn=_log_mix)
+                  step=jit_step(step), raw_step=step, spec=spec, log_fn=_log_mix)
 
 
 def asyncfeded_policy(spec: tu.FlatSpec, alpha: float = 0.6,
@@ -187,7 +191,7 @@ def asyncfeded_policy(spec: tu.FlatSpec, alpha: float = 0.6,
         return state, make_info(0, updated=True, mix=s)
 
     return Policy(name="asyncfeded", init=lambda p: base_state(spec, p),
-                  step=jit_step(step), spec=spec, log_fn=_log_mix)
+                  step=jit_step(step), raw_step=step, spec=spec, log_fn=_log_mix)
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +226,7 @@ def _buffered_policy(name: str, spec: tu.FlatSpec, buffer_size: int,
 
         return jax.lax.cond(ring.count >= L, flush, wait, state, ring)
 
-    return Policy(name=name, init=init, step=jit_step(step), spec=spec,
+    return Policy(name=name, init=init, step=jit_step(step), raw_step=step, spec=spec,
                   client_align=client_align)
 
 
@@ -265,7 +269,7 @@ def fedpsa_policy(spec: tu.FlatSpec, cfg: psa_lib.PSAConfig,
                             weights=pi.weights, kappas=pi.kappas,
                             temp=pi.temp, temp_valid=pi.temp_valid)
 
-    return Policy(name="fedpsa", init=init, step=jit_step(step), spec=spec,
+    return Policy(name="fedpsa", init=init, step=jit_step(step), raw_step=step, spec=spec,
                   sketch_k=cfg.sketch_k, needs_sketch=True, log_fn=_log_psa)
 
 
@@ -312,7 +316,7 @@ def ca2fl_policy(spec: tu.FlatSpec, num_clients: int, buffer_size: int = 5,
 
         return jax.lax.cond(ring.count >= L, flush, wait, state, ring, cache)
 
-    return Policy(name="ca2fl", init=init, step=jit_step(step), spec=spec)
+    return Policy(name="ca2fl", init=init, step=jit_step(step), raw_step=step, spec=spec)
 
 
 def fedfa_policy(spec: tu.FlatSpec, queue_len: int = 5,
@@ -343,7 +347,7 @@ def fedfa_policy(spec: tu.FlatSpec, queue_len: int = 5,
                                ring=ring)
         return state, make_info(L, updated=True, weights=w)
 
-    return Policy(name="fedfa", init=init, step=jit_step(step), spec=spec)
+    return Policy(name="fedfa", init=init, step=jit_step(step), raw_step=step, spec=spec)
 
 
 # ---------------------------------------------------------------------------
@@ -353,10 +357,36 @@ def fedfa_policy(spec: tu.FlatSpec, queue_len: int = 5,
 POLICY_NAMES = ("fedasync", "fedbuff", "fedpsa", "ca2fl", "fedfa", "fedpac",
                 "asyncfeded")
 
+# Policies are immutable (state lives in ServerState), so identical requests
+# share one Policy — and with it the jit cache of its compiled step(s).
+# Without this every run_async would rebuild the step closures and recompile.
+# FlatSpec hashes by layout; sketch_refresh participates by identity (the
+# simulator caches its sketch closures, so fedpsa hits too).
+_POLICY_CACHE = {}
+
 
 def make_policy(name: str, spec: tu.FlatSpec, *, num_clients: int = 50,
                 psa_cfg: Optional[psa_lib.PSAConfig] = None,
                 sketch_refresh: Optional[Callable] = None, **kw) -> Policy:
+    key = (name, spec, num_clients, psa_cfg, sketch_refresh,
+           tuple(sorted(kw.items())))
+    try:
+        cached = _POLICY_CACHE.get(key)
+    except TypeError:        # unhashable kwarg — build uncached
+        cached = None
+        key = None
+    if cached is not None:
+        return cached
+    policy = _make_policy(name, spec, num_clients=num_clients,
+                          psa_cfg=psa_cfg, sketch_refresh=sketch_refresh, **kw)
+    if key is not None:
+        _POLICY_CACHE[key] = policy
+    return policy
+
+
+def _make_policy(name: str, spec: tu.FlatSpec, *, num_clients: int = 50,
+                 psa_cfg: Optional[psa_lib.PSAConfig] = None,
+                 sketch_refresh: Optional[Callable] = None, **kw) -> Policy:
     if name == "fedasync":
         return fedasync_policy(spec, **kw)
     if name == "fedbuff":

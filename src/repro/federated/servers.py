@@ -7,12 +7,16 @@ pure jit-compiled ``policy.step`` in ``repro.federated.policies``.
 the simulator and benchmarks speak:
 
     receive(delta, client_params, meta) -> bool   # True if global updated
+    receive_many(...)                             # batched ingest (one scan)
     params                                        # current global pytree
+    flat_params                                   # current global (d,) vector
     version                                       # number of global updates
 
 ``meta`` carries tau (version gap), client_id, data_size and, for FedPSA,
 the uploaded sensitivity sketch. One ``receive`` costs exactly one jitted
-device call; ``params`` unflattens the flat state vector lazily (cached per
+device call; ``receive_many`` ingests a whole completion wave by scanning
+the policy's raw step — equivalent to B receives but with O(log B) device
+calls. ``params`` unflattens the flat state vector lazily (cached per
 version). The original unjitted classes live in ``repro.federated.legacy``
 as the numerical reference.
 """
@@ -22,10 +26,15 @@ from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common import tree as tu
 from repro.core import psa as psa_lib
 from repro.federated import policies as pol
+
+
+_STEP_MANY_CACHE = {}
+_SKETCH_REFRESH_CACHE = {}
 
 
 class PolicyServer:
@@ -39,11 +48,14 @@ class PolicyServer:
         self.needs_sketch = policy.needs_sketch
         self.client_align = policy.client_align
         self.state = policy.init(params)
+        self._step_many = None
         self.log: List[dict] = []
         self._version = 0
         self._tree_cache = None
         self._tree_cache_version = -1
-        self._unflatten = jax.jit(policy.spec.unflatten)
+        self._flat_cache = None
+        self._flat_cache_version = -1
+        self._unflatten = tu.jit_unflatten(policy.spec)
 
     @property
     def params(self):
@@ -51,6 +63,17 @@ class PolicyServer:
             self._tree_cache = self._unflatten(self.state.params)
             self._tree_cache_version = self._version
         return self._tree_cache
+
+    @property
+    def flat_params(self):
+        """Current global model as the flat (d,) vector — the dispatch
+        snapshot the cohort engine trains from. Copied (cached per version):
+        the live ``state.params`` buffer is donated to the next jitted step,
+        so a reference held across ``receive`` would be a deleted array."""
+        if self._flat_cache_version != self._version:
+            self._flat_cache = jnp.copy(self.state.params)
+            self._flat_cache_version = self._version
+        return self._flat_cache
 
     @property
     def version(self) -> int:
@@ -67,6 +90,11 @@ class PolicyServer:
         return jax.tree_util.tree_map(jnp.copy, self.state.psa)
 
     def receive(self, delta, client_params, meta) -> bool:
+        """Ingest one completion. ``delta``/``client_params`` may be pytrees
+        (legacy path) or flat (d,) vectors (cohort path) — ``spec.flatten``
+        inside the jitted step is the identity on an already-flat vector, so
+        the two layouts just select different traced variants of the same
+        policy step."""
         if self.needs_sketch and "sketch" not in meta:
             raise KeyError(
                 f"{self.name} requires meta['sketch'] (behavioral sketch)")
@@ -98,6 +126,129 @@ class PolicyServer:
                     self.log.append(entry)
         return updated
 
+    def _build_step_many(self):
+        # keyed on the policy (shared across servers via the policy cache),
+        # so repeated runs reuse one compiled scan per chunk size
+        cached = _STEP_MANY_CACHE.get(self.policy)
+        if cached is not None:
+            return cached
+        raw = self.policy.raw_step
+        assert raw is not None, f"{self.name} has no raw_step for batched ingest"
+
+        def many(state, arrs):
+            # arrs.tau carries each arrival's version-at-dispatch; the true
+            # staleness depends on updates applied by *earlier arrivals in
+            # this same batch*, so it is resolved inside the scan.
+            def body(s, a):
+                tau = s.version.astype(jnp.float32) - a.tau
+                s, info = raw(s, a._replace(tau=tau))
+                return s, (info, s.params)
+
+            state, (infos, params_seq) = jax.lax.scan(body, state, arrs)
+            return state, infos, params_seq
+
+        fn = jax.jit(many, donate_argnums=(0,))
+        _STEP_MANY_CACHE[self.policy] = fn
+        return fn
+
+    def receive_many(self, deltas, client_params, client_ids, data_sizes,
+                     v_dispatch, sketches=None):
+        """Batched ingest: apply B completions (stacked flat (B, d) arrays,
+        ordered by completion time) with one scanned device call per
+        power-of-two chunk instead of B separate ``receive`` calls.
+
+        Exactly equivalent to B sequential ``receive``s: the scan threads the
+        state through in order, staleness is resolved per-arrival inside the
+        scan from ``v_dispatch`` (version at dispatch), and the returned
+        ``snapshots[i]`` is the flat global vector *after* arrival i — what a
+        completion-triggered re-dispatch at that instant must train from.
+        Returns (updated (B,) bool, taus (B,) int list, snapshots (B, d)).
+        """
+        if self.needs_sketch and sketches is None:
+            raise KeyError(f"{self.name} requires behavioral sketches")
+        B = int(deltas.shape[0])
+        ids = np.asarray(client_ids, np.int64)
+        if self.state.cache is not None:
+            n = self.state.cache.data.shape[0]
+            if ids.size and (ids.min() < 0 or ids.max() >= n):
+                raise ValueError(
+                    f"client_id outside the server's num_clients={n} cache")
+        if self.policy.raw_step is None:
+            # policy registered without a raw step (pre-batching style):
+            # degrade to per-event ingest instead of failing
+            return self._receive_many_fallback(deltas, client_params, ids,
+                                               data_sizes, v_dispatch,
+                                               sketches)
+        if self._step_many is None:
+            self._step_many = self._build_step_many()
+        if sketches is None:
+            sketches = jnp.zeros((B, self.policy.sketch_k), jnp.float32)
+        state = self.state
+        infos_parts, snap_parts = [], []
+        off = 0
+        while off < B:
+            # largest power-of-two chunk so the jit cache stays O(log B)
+            chunk = 1 << int(np.log2(B - off))
+            sl = slice(off, off + chunk)
+            arrs = pol.Arrival(
+                update=deltas[sl], client_params=client_params[sl],
+                tau=jnp.asarray(v_dispatch[sl], jnp.float32),
+                client_id=jnp.asarray(ids[sl], jnp.int32),
+                data_size=jnp.asarray(data_sizes[sl], jnp.float32),
+                sketch=sketches[sl])
+            state, infos, snaps = self._step_many(state, arrs)
+            if self.policy.log_fn is None:
+                # only the update flags cross to the host (one sync, not six)
+                infos = infos._replace(updated=np.asarray(infos.updated))
+            else:
+                infos = jax.tree_util.tree_map(np.asarray, infos)
+            infos_parts.append(infos)
+            snap_parts.append(snaps)
+            off += chunk
+        self.state = state
+        updated = np.concatenate([p.updated.reshape(-1) for p in infos_parts])
+        snapshots = (snap_parts[0] if len(snap_parts) == 1
+                     else jnp.concatenate(snap_parts))
+        taus: List[int] = []
+        v = self._version
+        row = 0
+        for part in infos_parts:
+            for i in range(part.updated.shape[0]):
+                tau = v - int(v_dispatch[row])
+                taus.append(tau)
+                if part.updated[i]:
+                    v += 1
+                    if self.policy.log_fn is not None:
+                        info_row = pol.StepInfo(*[np.asarray(f)[i]
+                                                  for f in part])
+                        meta = {"tau": tau, "client_id": int(ids[row]),
+                                "data_size": float(data_sizes[row])}
+                        entry = self.policy.log_fn(info_row, meta)
+                        if entry is not None:
+                            self.log.append(entry)
+                row += 1
+        self._version = v
+        return updated, taus, snapshots
+
+    def _receive_many_fallback(self, deltas, client_params, ids, data_sizes,
+                               v_dispatch, sketches):
+        """Per-event equivalent of ``receive_many`` for policies with no
+        ``raw_step`` — B ``receive`` calls plus per-row snapshot copies."""
+        B = int(deltas.shape[0])
+        updated = np.zeros((B,), bool)
+        taus: List[int] = []
+        rows = []
+        for i in range(B):
+            tau = self._version - int(v_dispatch[i])
+            taus.append(tau)
+            meta = {"tau": tau, "client_id": int(ids[i]),
+                    "data_size": float(data_sizes[i])}
+            if sketches is not None:
+                meta["sketch"] = sketches[i]
+            updated[i] = self.receive(deltas[i], client_params[i], meta)
+            rows.append(self.flat_params)
+        return updated, taus, jnp.stack(rows)
+
 
 def make_server(name: str, params, *, num_clients: int = 50,
                 psa_cfg: Optional[psa_lib.PSAConfig] = None,
@@ -111,7 +262,12 @@ def make_server(name: str, params, *, num_clients: int = 50,
     sketch_refresh = None
     if name == "fedpsa":
         assert psa_cfg is not None and sketch_fn is not None
-        sketch_refresh = lambda vec: sketch_fn(spec.unflatten(vec))
+        key = (id(sketch_fn), spec)
+        sketch_refresh = _SKETCH_REFRESH_CACHE.get(key)
+        if sketch_refresh is None:
+            sketch_refresh = lambda vec: sketch_fn(spec.unflatten(vec))
+            sketch_refresh._sketch_fn = sketch_fn   # keep the id() key alive
+            _SKETCH_REFRESH_CACHE[key] = sketch_refresh
     policy = pol.make_policy(name, spec, num_clients=num_clients,
                              psa_cfg=psa_cfg, sketch_refresh=sketch_refresh,
                              **kw)
