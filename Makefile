@@ -2,13 +2,40 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-smoke bench bench-sim
+.PHONY: test test-fast test-multidevice golden golden-regen golden-check \
+	bench-smoke bench bench-sim
 
 test:
 	$(PY) -m pytest -x -q
 
+# The tier-1 subset: everything auto-marked tier1 by tests/conftest.py
+# (i.e. neither slow paper-world sims nor multidevice layouts).
 test-fast:
-	$(PY) -m pytest -x -q -m "not slow"
+	$(PY) -m pytest -x -q -m tier1
+
+# Multidevice tier: the sharded-layout tests on 4 virtual CPU devices.
+test-multidevice:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+		$(PY) -m pytest -x -q -m multidevice
+
+# Golden-trajectory suite: every policy's checked-in digest stream, on the
+# sequential oracle and the cohort engine (add test-multidevice for the
+# sharded paths).
+golden:
+	$(PY) -m pytest -x -q tests/test_golden.py
+
+# Re-derive tests/golden/*.json from the sequential oracle after an
+# INTENTIONAL numerical change, then commit the diff (CI fails on stale
+# digests).
+golden-regen:
+	$(PY) tests/test_golden.py --regen
+
+# CI staleness gate: re-derive the oracle trajectories and compare against
+# the COMMITTED digests within tolerance (robust to float low-bit drift
+# across BLAS/SIMD builds; fails when a numerical change landed without a
+# committed golden-regen).
+golden-check:
+	$(PY) tests/test_golden.py --check
 
 # Kernel + server-step microbenchmarks; writes artifacts/bench/*.json
 # including BENCH_server_step.json (legacy ingest vs fused jitted step).

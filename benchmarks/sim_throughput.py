@@ -10,9 +10,17 @@ run populates the jit caches so compile time is not billed to either engine.
 Writes artifacts/bench/BENCH_sim_throughput.json. Acceptance gate (ISSUE 2):
 cohort >= 5x legacy at C=500. Override the client counts with
 SIM_BENCH_CLIENTS=50,500 (comma-separated) for a quick smoke run.
+
+``--mesh N`` adds a third engine variant per cell — the cohort engine with
+the policy server sharded over an N-device mesh (the wave also trains
+data-parallel over the client axis) — so the artifact records sharded vs
+replicated dispatch throughput side by side. On a CPU box combine with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (virtual devices:
+expect layout overhead, not speedup — the point is the measurement).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
@@ -23,6 +31,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import ClientDataset, make_classification
 from repro.federated import SimConfig, run_async
+from repro.launch.mesh import make_fed_mesh
 from repro.models import model as model_lib
 from benchmarks import common
 
@@ -52,12 +61,13 @@ def build_world(num_clients: int, seed: int = 0):
     return cfg, clients, test, params
 
 
-def sim_for(num_clients: int, horizon: float, engine: str) -> SimConfig:
+def sim_for(num_clients: int, horizon: float, engine: str,
+            mesh=None) -> SimConfig:
     return SimConfig(
         num_clients=num_clients, concurrency=0.2, local_epochs=LOCAL_EPOCHS,
         batch_size=BATCH_SIZE, horizon=horizon, eval_every=horizon,
         latency_kind="uniform", latency_lo=LATENCY_LO, latency_hi=LATENCY_HI,
-        seed=0, eval_batches=2, engine=engine)
+        seed=0, eval_batches=2, engine=engine, mesh=mesh)
 
 
 def horizon_for(num_clients: int, target: int) -> float:
@@ -68,19 +78,22 @@ def horizon_for(num_clients: int, target: int) -> float:
     return max(target / rate, 2.0 * LATENCY_HI)
 
 
-def bench_cell(num_clients: int) -> dict:
+def bench_cell(num_clients: int, mesh=None) -> dict:
     cfg, clients, test, params = build_world(num_clients)
     horizon = horizon_for(num_clients, TARGET_DISPATCHES)
     cell = {"num_clients": num_clients, "horizon": horizon}
-    for engine in ("sequential", "cohort"):
-        sim = sim_for(num_clients, horizon, engine)
+    variants = [("sequential", "sequential", None), ("cohort", "cohort", None)]
+    if mesh is not None:
+        variants.append(("cohort_sharded", "cohort", mesh))
+    for label, engine, m in variants:
+        sim = sim_for(num_clients, horizon, engine, mesh=m)
         # full-length warmup: identical run, so every wave/chunk bucket the
         # timed run hits is already compiled for both engines
         run_async("fedasync", cfg, params, clients, test, sim)
         t0 = time.perf_counter()
         res = run_async("fedasync", cfg, params, clients, test, sim)
         wall = time.perf_counter() - t0
-        cell[engine] = {
+        cell[label] = {
             "dispatches": res.dispatches,
             "wall_s": wall,
             "dispatches_per_s": res.dispatches / wall,
@@ -89,26 +102,46 @@ def bench_cell(num_clients: int) -> dict:
                                  if res.cohorts else 1.0),
             "final_accuracy": res.final_accuracy,
         }
-        print(f"sim_throughput,C={num_clients},engine={engine},"
+        print(f"sim_throughput,C={num_clients},engine={label},"
               f"dispatches={res.dispatches},wall_s={wall:.2f},"
               f"dps={res.dispatches / wall:.2f}", flush=True)
     cell["speedup"] = (cell["cohort"]["dispatches_per_s"]
                        / cell["sequential"]["dispatches_per_s"])
+    if mesh is not None:
+        cell["sharded_vs_replicated"] = (
+            cell["cohort_sharded"]["dispatches_per_s"]
+            / cell["cohort"]["dispatches_per_s"])
     print(f"sim_throughput,C={num_clients},speedup={cell['speedup']:.2f}x",
           flush=True)
     return cell
 
 
 def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="also run the cohort engine with an N-device "
+                         "sharded policy server per cell (0 = off)")
+    args = ap.parse_args(argv)
+    mesh = None
+    if args.mesh:
+        try:
+            mesh = make_fed_mesh(args.mesh)
+        except ValueError as e:   # too few devices; the error carries the fix
+            print(e, file=sys.stderr)
+            return 2
     counts = os.environ.get("SIM_BENCH_CLIENTS", "50,500,5000")
-    cells = [bench_cell(int(c)) for c in counts.split(",")]
+    cells = [bench_cell(int(c), mesh=mesh) for c in counts.split(",")]
     payload = {
         "model": "paper-synthetic-mlp",
         "local_steps_per_dispatch": LOCAL_EPOCHS * (SAMPLES_PER_CLIENT // BATCH_SIZE),
         "backend": jax.default_backend(),
+        "mesh_devices": args.mesh or None,
         "cells": cells,
     }
-    path = common.save("BENCH_sim_throughput", payload)
+    # mesh runs record to their own artifact so the headline replicated
+    # numbers are never clobbered by a layout experiment
+    artifact = "BENCH_sim_throughput_mesh" if mesh else "BENCH_sim_throughput"
+    path = common.save(artifact, payload)
     print(f"wrote {path}")
     gate = [c for c in cells if c["num_clients"] == 500]
     if gate and gate[0]["speedup"] < 5.0:

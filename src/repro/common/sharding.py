@@ -7,9 +7,11 @@ CPU (empty rules), a 16x16 single pod, or a 2x16x16 multi-pod mesh.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Mapping, Optional, Sequence, Union
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxis = Union[str, Sequence[str], None]
@@ -109,3 +111,61 @@ def with_logical_constraint(x, rules: LogicalRules, logical_axes):
 
 def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Federated flat-parameter sharding (the (d,) axis of the policy server)
+# ---------------------------------------------------------------------------
+
+# Logical rules for the federated stack. ``param_shard`` is the flat (d,)
+# parameter axis of ServerState (params / ring rows / cache rows);
+# ``cohort`` is the client axis of a completion wave (data parallel).
+# Both map onto the one-axis federated mesh from ``launch.mesh.make_fed_mesh``.
+FEDERATED_RULES = LogicalRules({"param_shard": "d", "cohort": "d"})
+
+# Mesh-axis name the surrounding code is currently shard_map-ed over on the
+# flat parameter axis, or None when tracing single-device code. Policy steps
+# are pure functions traced in both layouts; the two helpers below let the
+# SAME step body lower to a plain reduction on one device and to a
+# psum/all_gather-completed one under ``shard_map`` — so sharding never
+# forks the numerics-bearing code.
+_PARAM_AXIS: list = [None]
+
+
+@contextlib.contextmanager
+def param_axis(name: Optional[str]):
+    """Trace-time context: mark that code is being traced per-shard over the
+    flat parameter axis ``name`` (inside shard_map)."""
+    _PARAM_AXIS.append(name)
+    try:
+        yield
+    finally:
+        _PARAM_AXIS.pop()
+
+
+def current_param_axis() -> Optional[str]:
+    return _PARAM_AXIS[-1]
+
+
+def param_axis_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """``jnp.sum(x)`` over (an elementwise function of) the flat parameter
+    axis, psum-completed across shards when traced under ``param_axis``.
+    The ONE reduction primitive d-contracting policy code may use."""
+    s = jnp.sum(x)
+    ax = current_param_axis()
+    if ax is not None:
+        s = jax.lax.psum(s, ax)
+    return s
+
+
+def gather_param_axis(vec: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Materialize the full (d,) flat vector from a per-shard slice when
+    traced under ``param_axis`` (all_gather + strip the divisibility
+    padding); the identity on single-device traces. Used by the rare
+    whole-vector consumers (FedPSA's global-sketch refresh) that cannot be
+    expressed per-shard."""
+    ax = current_param_axis()
+    if ax is None:
+        return vec
+    full = jax.lax.all_gather(vec, ax, tiled=True)
+    return full[:d]

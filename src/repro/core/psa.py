@@ -23,6 +23,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.common import sharding
 from repro.common import tree as tu
 from repro.core import aggregation, sketch, thermometer
 from repro.core.sensitivity import fisher_diagonal, sensitivity as _compute_sensitivity
@@ -126,7 +127,8 @@ def server_receive(state: PSAState, update_vec: jnp.ndarray,
     buffer, slot = tu.ring_update(state.buffer,
                                   update_vec.astype(jnp.float32), state.count)
     kappas = state.kappas.at[slot].set(kappa)
-    m = jnp.sum(jnp.square(update_vec.astype(jnp.float32)))  # Eq. 16
+    # Eq. 16 — param_axis_sum: psum-completed when traced per-shard
+    m = sharding.param_axis_sum(jnp.square(update_vec.astype(jnp.float32)))
     return state._replace(buffer=buffer, kappas=kappas,
                           count=state.count + 1,
                           thermo=thermometer.push(state.thermo, m))

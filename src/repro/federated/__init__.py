@@ -10,7 +10,8 @@ from repro.federated.simulator import (
     ENGINES,
 )
 from repro.federated.cohort import CohortEngine
-from repro.federated.servers import make_server, PolicyServer
+from repro.federated.servers import (make_server, PolicyServer,
+                                     ShardedPolicyServer, server_state_specs)
 from repro.federated.policies import (
     Arrival,
     Policy,

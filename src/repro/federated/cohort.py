@@ -27,7 +27,9 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.common import sharding
 from repro.common import tree as tu
 from repro.data.loader import StackedClients, epoch_batch_indices
 from repro.federated.client import _head
@@ -50,7 +52,8 @@ class CohortEngine:
     def __init__(self, cfg: ModelConfig, stacked: StackedClients,
                  spec: tu.FlatSpec, template_params, *,
                  local_epochs: int = 5, batch_size: int = 64,
-                 prox: float = 0.0, align: float = 0.0):
+                 prox: float = 0.0, align: float = 0.0,
+                 mesh=None, rules: Optional[sharding.LogicalRules] = None):
         assert cfg.family in ("cnn", "mlp"), \
             f"cohort engine trains the paper's cnn/mlp families, not {cfg.family}"
         self.cfg = cfg
@@ -62,6 +65,21 @@ class CohortEngine:
         self.sizes = np.asarray(stacked.sizes, np.int64)
         self.x = jnp.asarray(stacked.x)
         self.y = jnp.asarray(stacked.y)
+        # With a mesh, a wave trains data-parallel: the cohort (client) axis
+        # of every per-member input shards over the ``cohort`` logical axis
+        # and the data slab replicates; vmap members are independent, so the
+        # numerics are identical to the single-device call.
+        self.mesh = mesh
+        self.cohort_axis = None
+        if mesh is not None:
+            rules = rules or sharding.FEDERATED_RULES
+            ax = rules.mesh_axes(("cohort",))[0]
+            if ax is not None and ax in mesh.axis_names:
+                self.cohort_axis = ax
+                self._axis_n = int(mesh.shape[ax])
+            rep = NamedSharding(mesh, P())
+            self.x = jax.device_put(self.x, rep)
+            self.y = jax.device_put(self.y, rep)
         # Per-client steps/epoch under the drop-last rule; the scan runs the
         # global max and masks the tail (a masked step is an exact no-op).
         bs_c = np.minimum(self.batch_size, self.sizes)
@@ -188,8 +206,17 @@ class CohortEngine:
                                              (cids, idx, valid, lr_steps))
             counts = np.concatenate(
                 [counts, np.ones((pad,) + counts.shape[1:], counts.dtype)])
-        deltas, w = self._run(self.x, self.y, params_stack,
-                              jnp.asarray(cids), jnp.asarray(idx),
-                              jnp.asarray(valid), jnp.asarray(counts),
-                              jnp.asarray(lr_steps))
+        args = (params_stack, jnp.asarray(cids), jnp.asarray(idx),
+                jnp.asarray(valid), jnp.asarray(counts),
+                jnp.asarray(lr_steps))
+        if self.mesh is not None:
+            # shard the cohort axis when it divides the mesh; otherwise the
+            # wave still runs on the mesh, replicated (exact either way)
+            ax = (self.cohort_axis
+                  if self.cohort_axis and Bp % self._axis_n == 0 else None)
+            args = tuple(
+                jax.device_put(a, NamedSharding(
+                    self.mesh, P(*([ax] + [None] * (a.ndim - 1)))))
+                for a in args)
+        deltas, w = self._run(self.x, self.y, *args)
         return deltas[:B], w[:B]

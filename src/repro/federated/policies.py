@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import sharding
 from repro.common import tree as tu
 from repro.core import aggregation, psa as psa_lib
 
@@ -183,8 +184,10 @@ def asyncfeded_policy(spec: tu.FlatSpec, alpha: float = 0.6,
     def step(state: ServerState, arr: Arrival):
         dw = spec.flatten(arr.update)
         wi = spec.flatten(arr.client_params)
-        dist = jnp.sqrt(jnp.sum(jnp.square(wi - state.params)))
-        norm = jnp.sqrt(jnp.sum(jnp.square(dw)))
+        # param_axis_sum: these d-contractions psum across shards when the
+        # step is traced under the sharded server's shard_map
+        dist = jnp.sqrt(sharding.param_axis_sum(jnp.square(wi - state.params)))
+        norm = jnp.sqrt(sharding.param_axis_sum(jnp.square(dw)))
         s = alpha * jnp.minimum(1.0, norm / (dist + eps))
         state = state._replace(params=state.params + s * dw,
                                version=state.version + 1)
@@ -258,10 +261,17 @@ def fedpsa_policy(spec: tu.FlatSpec, cfg: psa_lib.PSAConfig,
         gs = None if sketch_refresh is None else sketch_refresh(base.params)
         return base._replace(psa=psa_lib.init_state(cfg, spec.size, gs))
 
+    # The global-sketch refresh consumes the WHOLE flat vector (it unflattens
+    # into the model pytree); under the sharded server's shard_map the step
+    # sees only a (d_local,) slice, so the refresh gathers first (identity on
+    # single-device traces). Its (k,) result is identical on every shard.
+    refresh = None if sketch_refresh is None else (
+        lambda vec: sketch_refresh(sharding.gather_param_axis(vec, spec.size)))
+
     def step(state: ServerState, arr: Arrival):
         dw = spec.flatten(arr.update)
         psa, params, pi = psa_lib.server_step(
-            state.psa, state.params, dw, arr.sketch, cfg, sketch_refresh)
+            state.psa, state.params, dw, arr.sketch, cfg, refresh)
         state = state._replace(
             params=params, psa=psa,
             version=state.version + pi.updated.astype(jnp.int32))

@@ -19,6 +19,12 @@ the policy's raw step — equivalent to B receives but with O(log B) device
 calls. ``params`` unflattens the flat state vector lazily (cached per
 version). The original unjitted classes live in ``repro.federated.legacy``
 as the numerical reference.
+
+``ShardedPolicyServer`` is the mesh-sharded drop-in: the same policy steps
+run under ``shard_map`` with every ``(…, d)`` tensor of ``ServerState``
+partitioned over the mesh's flat-parameter axis (see
+``server_state_specs`` for the layout contract) and only scalar reductions
+crossing shards via ``psum`` (``common.sharding.param_axis_sum``).
 """
 from __future__ import annotations
 
@@ -27,7 +33,10 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.common import sharding
 from repro.common import tree as tu
 from repro.core import psa as psa_lib
 from repro.federated import policies as pol
@@ -35,6 +44,28 @@ from repro.federated import policies as pol
 
 _STEP_MANY_CACHE = {}
 _SKETCH_REFRESH_CACHE = {}
+_SHARDED_STEP_CACHE = {}
+_SHARDED_MANY_CACHE = {}
+
+
+def _scan_many(raw):
+    """The ONE batched-ingest body both layouts compile: scan ``raw`` over
+    a batch of arrivals ordered by completion time. ``arrs.tau`` carries
+    each arrival's version-at-dispatch; the true staleness depends on
+    updates applied by *earlier arrivals in this same batch*, so it is
+    resolved inside the scan, which also emits the post-receive flat
+    vector per arrival (what a re-dispatch at that instant snapshots)."""
+
+    def many(state, arrs):
+        def body(s, a):
+            tau = s.version.astype(jnp.float32) - a.tau
+            s, info = raw(s, a._replace(tau=tau))
+            return s, (info, s.params)
+
+        state, (infos, params_seq) = jax.lax.scan(body, state, arrs)
+        return state, infos, params_seq
+
+    return many
 
 
 class PolicyServer:
@@ -48,6 +79,7 @@ class PolicyServer:
         self.needs_sketch = policy.needs_sketch
         self.client_align = policy.client_align
         self.state = policy.init(params)
+        self._step = policy.step
         self._step_many = None
         self.log: List[dict] = []
         self._version = 0
@@ -57,10 +89,24 @@ class PolicyServer:
         self._flat_cache_version = -1
         self._unflatten = tu.jit_unflatten(policy.spec)
 
+    # -- layout hooks (identity here; ShardedPolicyServer pads/strips) ------
+
+    def _prep_vec(self, x):
+        """Adapt one delta/client-params argument to the step's layout."""
+        return x
+
+    def _prep_stack(self, x):
+        """Adapt a stacked (B, d) argument to the batched step's layout."""
+        return x
+
+    def _strip_stack(self, snaps):
+        """Undo ``_prep_stack`` on the returned (B, d) snapshot rows."""
+        return snaps
+
     @property
     def params(self):
         if self._tree_cache_version != self._version:
-            self._tree_cache = self._unflatten(self.state.params)
+            self._tree_cache = self._unflatten(self.flat_params)
             self._tree_cache_version = self._version
         return self._tree_cache
 
@@ -107,8 +153,8 @@ class PolicyServer:
         else:
             cid = int(meta.get("client_id", 0))
         arrival = pol.Arrival(
-            update=delta,
-            client_params=client_params,
+            update=self._prep_vec(delta),
+            client_params=self._prep_vec(client_params),
             tau=jnp.float32(meta.get("tau", 0)),
             client_id=jnp.int32(cid),
             data_size=jnp.float32(meta.get("data_size", 1.0)),
@@ -116,7 +162,7 @@ class PolicyServer:
                 meta["sketch"], jnp.float32) if "sketch" in meta
             else jnp.zeros((self.policy.sketch_k,), jnp.float32),
         )
-        self.state, info = self.policy.step(self.state, arrival)
+        self.state, info = self._step(self.state, arrival)
         updated = bool(info.updated)
         if updated:
             self._version += 1
@@ -134,20 +180,7 @@ class PolicyServer:
             return cached
         raw = self.policy.raw_step
         assert raw is not None, f"{self.name} has no raw_step for batched ingest"
-
-        def many(state, arrs):
-            # arrs.tau carries each arrival's version-at-dispatch; the true
-            # staleness depends on updates applied by *earlier arrivals in
-            # this same batch*, so it is resolved inside the scan.
-            def body(s, a):
-                tau = s.version.astype(jnp.float32) - a.tau
-                s, info = raw(s, a._replace(tau=tau))
-                return s, (info, s.params)
-
-            state, (infos, params_seq) = jax.lax.scan(body, state, arrs)
-            return state, infos, params_seq
-
-        fn = jax.jit(many, donate_argnums=(0,))
+        fn = jax.jit(_scan_many(raw), donate_argnums=(0,))
         _STEP_MANY_CACHE[self.policy] = fn
         return fn
 
@@ -183,6 +216,8 @@ class PolicyServer:
             self._step_many = self._build_step_many()
         if sketches is None:
             sketches = jnp.zeros((B, self.policy.sketch_k), jnp.float32)
+        deltas = self._prep_stack(deltas)
+        client_params = self._prep_stack(client_params)
         state = self.state
         infos_parts, snap_parts = [], []
         off = 0
@@ -228,7 +263,7 @@ class PolicyServer:
                             self.log.append(entry)
                 row += 1
         self._version = v
-        return updated, taus, snapshots
+        return updated, taus, self._strip_stack(snapshots)
 
     def _receive_many_fallback(self, deltas, client_params, ids, data_sizes,
                                v_dispatch, sketches):
@@ -250,14 +285,186 @@ class PolicyServer:
         return updated, taus, jnp.stack(rows)
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded execution layer
+# ---------------------------------------------------------------------------
+
+def server_state_specs(state: pol.ServerState, axis: str) -> pol.ServerState:
+    """The sharded-layout contract, as a ``ServerState`` of PartitionSpecs.
+
+    Exactly the tensors whose TRAILING axis is the flat parameter axis shard
+    over the mesh: ``params`` (d,), ``ring.data`` (L, d), ``psa.buffer``
+    (L_s, d), ``cache.data`` (C, d) and ``cache.total`` (d,). Everything
+    else — versions, fill counts, kappas, the thermometer queue, sketches,
+    cache validity — is small and replicated, so all cross-shard traffic is
+    the scalar psums in ``param_axis_sum`` (plus FedPSA's all_gather on its
+    sketch-refresh branch). A new policy opts in by storing its d-sized
+    state in these fields (or extending this template alongside them)."""
+    rep = P()
+    row = P(axis)
+    mat = P(None, axis)
+    ring = None if state.ring is None else pol.RingState(data=mat, count=rep)
+    cache = None if state.cache is None else pol.CacheState(
+        data=mat, valid=rep, total=row)
+    psa = None
+    if state.psa is not None:
+        psa = psa_lib.PSAState(
+            buffer=mat, kappas=rep, count=rep,
+            thermo=jax.tree_util.tree_map(lambda _: rep, state.psa.thermo),
+            global_sketch=rep)
+    return pol.ServerState(params=row, version=rep, ring=ring, psa=psa,
+                           cache=cache)
+
+
+def _arrival_specs(axis: str, batched: bool) -> pol.Arrival:
+    vec = P(None, axis) if batched else P(axis)
+    rep = P()
+    return pol.Arrival(update=vec, client_params=vec, tau=rep, client_id=rep,
+                       data_size=rep, sketch=rep)
+
+
+_INFO_SPECS = pol.StepInfo(updated=P(), weights=P(), kappas=P(), temp=P(),
+                           temp_valid=P(), mix=P())
+
+
+def _pad_last(x: jnp.ndarray, d_pad: int) -> jnp.ndarray:
+    """Zero-pad the trailing (flat parameter) axis up to the divisible
+    width. The pad region is all-zero in every d-sized input, so it stays
+    identically zero through every policy's elementwise update rules and
+    contributes nothing to the psum'd reductions."""
+    pad = d_pad - x.shape[-1]
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+class ShardedPolicyServer(PolicyServer):
+    """``PolicyServer`` with ``ServerState`` laid out over a one-axis mesh.
+
+    The flat parameter axis is zero-padded to a device-count multiple and
+    partitioned per ``server_state_specs``; the policy's *raw* step runs
+    under ``shard_map`` (traced inside ``common.sharding.param_axis`` so
+    its d-contractions psum), which makes the per-shard program the same
+    elementwise/ring arithmetic as the single-device step — including the
+    per-shard Pallas ``buffer_agg`` path on TPU. Host-facing results
+    (``flat_params``, ``receive_many`` snapshots) strip the padding, so the
+    simulator and cohort engine are layout-agnostic."""
+
+    def __init__(self, policy: pol.Policy, params, mesh: Mesh,
+                 rules: Optional[sharding.LogicalRules] = None):
+        rules = rules or sharding.FEDERATED_RULES
+        axis = rules.mesh_axes(("param_shard",))[0]
+        if axis is None or axis not in mesh.axis_names:
+            raise ValueError(
+                f"rules must map 'param_shard' onto a mesh axis of "
+                f"{mesh.axis_names}, got {axis!r}")
+        self.mesh = mesh
+        self.axis = axis
+        self._d = policy.spec.size
+        n = mesh.shape[axis]
+        self._d_pad = -(-self._d // n) * n
+        super().__init__(policy, params)
+        self._specs = server_state_specs(self.state, axis)
+        self.state = self._shard_state(self.state)
+        self._step = self._build_step()
+
+    # -- layout ------------------------------------------------------------
+
+    def _shard_state(self, state: pol.ServerState) -> pol.ServerState:
+        padded = jax.tree_util.tree_map(
+            lambda x, s: _pad_last(x, self._d_pad)
+            if (len(s) and s[-1] == self.axis) else x,
+            state, self._specs)
+        put = jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self._specs,
+            is_leaf=lambda s: isinstance(s, P))
+        return jax.device_put(padded, put)
+
+    def _prep_vec(self, x):
+        # flatten is the identity reshape on an already-flat vector
+        return _pad_last(self.policy.spec.flatten(x), self._d_pad)
+
+    def _prep_stack(self, x):
+        return _pad_last(jnp.asarray(x), self._d_pad)
+
+    def _strip_stack(self, snaps):
+        return snaps[:, :self._d] if snaps.shape[-1] != self._d else snaps
+
+    @property
+    def flat_params(self):
+        """Current global model as the *unpadded* (d,) vector (the slice
+        allocates a fresh buffer, so donation of the live state is safe)."""
+        if self._flat_cache_version != self._version:
+            # copy: when d == d_pad the slice can alias the live state
+            # buffer, which the next donating step would invalidate
+            self._flat_cache = jnp.copy(self.state.params[:self._d])
+            self._flat_cache_version = self._version
+        return self._flat_cache
+
+    # -- compiled steps ----------------------------------------------------
+
+    def _build_step(self):
+        key = (self.policy, self.mesh, self.axis)
+        cached = _SHARDED_STEP_CACHE.get(key)
+        if cached is not None:
+            return cached
+        raw = self.policy.raw_step
+        assert raw is not None, \
+            f"{self.name} has no raw_step; cannot run sharded"
+        axis = self.axis
+
+        def body(state, arr):
+            with sharding.param_axis(axis):
+                return raw(state, arr)
+
+        fn = jax.jit(shard_map(
+            body, mesh=self.mesh,
+            in_specs=(self._specs, _arrival_specs(axis, batched=False)),
+            out_specs=(self._specs, _INFO_SPECS), check_rep=False),
+            donate_argnums=(0,))
+        _SHARDED_STEP_CACHE[key] = fn
+        return fn
+
+    def _build_step_many(self):
+        key = (self.policy, self.mesh, self.axis)
+        cached = _SHARDED_MANY_CACHE.get(key)
+        if cached is not None:
+            return cached
+        raw = self.policy.raw_step
+        assert raw is not None, \
+            f"{self.name} has no raw_step; cannot run sharded"
+        axis = self.axis
+        scan_many = _scan_many(raw)
+
+        def many(state, arrs):
+            # the context wraps the TRACE of the shared scan body, so its
+            # d-contractions psum exactly as in the per-arrival step
+            with sharding.param_axis(axis):
+                return scan_many(state, arrs)
+
+        fn = jax.jit(shard_map(
+            many, mesh=self.mesh,
+            in_specs=(self._specs, _arrival_specs(axis, batched=True)),
+            out_specs=(self._specs, _INFO_SPECS, P(None, axis)),
+            check_rep=False), donate_argnums=(0,))
+        _SHARDED_MANY_CACHE[key] = fn
+        return fn
+
+
 def make_server(name: str, params, *, num_clients: int = 50,
                 psa_cfg: Optional[psa_lib.PSAConfig] = None,
-                sketch_fn: Optional[Callable] = None, **kw) -> PolicyServer:
+                sketch_fn: Optional[Callable] = None,
+                mesh: Optional[Mesh] = None,
+                rules: Optional[sharding.LogicalRules] = None,
+                **kw) -> PolicyServer:
     """Build the policy-backed server for one algorithm.
 
     ``sketch_fn`` (fedpsa) maps a params *pytree* to its (k,) sketch; the
     policy core re-expresses it over the flat layout so the global-sketch
-    refresh fuses into the jitted step."""
+    refresh fuses into the jitted step. With ``mesh`` the server state is
+    laid out over the mesh's flat-parameter axis (``ShardedPolicyServer``);
+    ``rules`` (default ``common.sharding.FEDERATED_RULES``) names the mesh
+    axis via the ``param_shard`` logical axis."""
     spec = tu.FlatSpec(params)
     sketch_refresh = None
     if name == "fedpsa":
@@ -271,4 +478,6 @@ def make_server(name: str, params, *, num_clients: int = 50,
     policy = pol.make_policy(name, spec, num_clients=num_clients,
                              psa_cfg=psa_cfg, sketch_refresh=sketch_refresh,
                              **kw)
+    if mesh is not None:
+        return ShardedPolicyServer(policy, params, mesh, rules)
     return PolicyServer(policy, params)

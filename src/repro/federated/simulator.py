@@ -87,6 +87,16 @@ class SimConfig:
     eval_batch_size: int = 512
     engine: str = "cohort"             # "cohort" (batched) | "sequential"
     max_cohort: int = 256              # cap on one wave's device batch
+    # Layout: with a mesh, the policy server shards ServerState over the
+    # mesh's flat-parameter axis (servers.ShardedPolicyServer) and the
+    # cohort engine trains waves data-parallel over the client axis; rules
+    # (default common.sharding.FEDERATED_RULES) map the logical
+    # param_shard/cohort axes onto mesh axes. None = single-device layout.
+    mesh: Optional[object] = None      # jax.sharding.Mesh
+    rules: Optional[object] = None     # common.sharding.LogicalRules
+    # Record a per-receive (||w||, probe·w) digest stream of the global
+    # model — the golden-trajectory fingerprint (tests/test_golden.py).
+    record_trajectory: bool = False
 
 
 @dataclass
@@ -96,10 +106,12 @@ class SimResult:
     final_accuracy: float = 0.0
     versions: int = 0
     dispatches: int = 0
+    launched: int = 0                 # total dispatch calls (incl. in flight)
     dropped: int = 0                  # dispatches lost to client unavailability
     cohorts: int = 0                  # device batches the cohort engine ran
     server_log: List[dict] = field(default_factory=list)
     receive_log: List[dict] = field(default_factory=list)
+    digests: List[List[float]] = field(default_factory=list)
 
     @property
     def aulc(self) -> float:
@@ -211,6 +223,30 @@ def _build_sketch_fn_flat(cfg: ModelConfig, calib_batch: dict,
     return fn
 
 
+# Trajectory digest: one (||w||_2, probe·w) pair per applied receive — a
+# 2-float fingerprint of the full (d,) global vector that any execution path
+# (sequential, cohort, sharded) can be compared on within float tolerance.
+_DIGEST_SEED = 0xD16E57
+_DIGEST_FN_CACHE: Dict[int, Callable] = {}
+
+
+def make_digest_fn(d: int) -> Callable:
+    """(B, d) -> (B, 2) numpy digest with the fixed probe vector for d.
+    Host-side on purpose: the rows are transferred for recording anyway,
+    and a jitted variant would recompile for every distinct wave size."""
+    fn = _DIGEST_FN_CACHE.get(d)
+    if fn is None:
+        probe = np.random.RandomState(_DIGEST_SEED).randn(d).astype(np.float32)
+
+        def fn(rows):
+            rows = np.asarray(rows, np.float32)
+            return np.stack([np.sqrt(np.sum(rows * rows, axis=-1)),
+                             rows @ probe], axis=-1)
+
+        _DIGEST_FN_CACHE[d] = fn
+    return fn
+
+
 class _Event(NamedTuple):
     """One in-flight dispatch. ``snapshot`` is the global model captured at
     dispatch time — a flat (d,) vector or a ``(source, row)`` reference into
@@ -282,8 +318,11 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
         sketch_fn = make_sketch_fn(cfg, calib_batch, psa_cfg)
     server = servers_lib.make_server(
         server_name, init_params, num_clients=sim.num_clients,
-        psa_cfg=psa_cfg, sketch_fn=sketch_fn, **(server_kwargs or {}))
+        psa_cfg=psa_cfg, sketch_fn=sketch_fn, mesh=sim.mesh, rules=sim.rules,
+        **(server_kwargs or {}))
     align = getattr(server, "client_align", 0.0)
+    digest_fn = (make_digest_fn(server.policy.spec.size)
+                 if sim.record_trajectory else None)
 
     evaluate = _make_eval(cfg, test_ds, sim)
     result = SimResult()
@@ -303,6 +342,7 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
             version = server.version
         heapq.heappush(heap, _Event(t_done, seq, cid, snap, version, ok))
         seq += 1
+        result.launched += 1
 
     for _ in range(concurrency):
         dispatch(0.0)
@@ -310,11 +350,12 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
     if batched:
         t = _drain_cohort(server, cfg, init_params, client_datasets, sim,
                           dispatch, heap, evaluate, result, data_sizes,
-                          align, psa_cfg, calib_batch, receive_hook)
+                          align, psa_cfg, calib_batch, receive_hook,
+                          digest_fn)
     else:
         t = _drain_sequential(server, cfg, client_datasets, sim, dispatch,
                               heap, evaluate, result, data_sizes, align,
-                              sketch_fn, receive_hook)
+                              sketch_fn, receive_hook, digest_fn)
 
     result.final_accuracy = evaluate(server.params)
     result.times.append(min(t, sim.horizon))
@@ -326,7 +367,7 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
 
 def _drain_sequential(server, cfg, client_datasets, sim: SimConfig, dispatch,
                       heap, evaluate, result: SimResult, data_sizes, align,
-                      sketch_fn, receive_hook) -> float:
+                      sketch_fn, receive_hook, digest_fn=None) -> float:
     """Legacy reference loop: one local_update per completion (oracle)."""
     next_eval = 0.0
     t = 0.0
@@ -359,6 +400,9 @@ def _drain_sequential(server, cfg, client_datasets, sim: SimConfig, dispatch,
         if receive_hook is not None:
             receive_hook(server, w_client, delta, meta, t)
         server.receive(delta, w_client, meta)
+        if digest_fn is not None:
+            result.digests.append(
+                digest_fn(server.flat_params[None, :])[0].tolist())
         result.dispatches += 1
         result.receive_log.append({"t": t, "tau": meta["tau"], "client": ev.cid})
         dispatch(t)
@@ -367,7 +411,8 @@ def _drain_sequential(server, cfg, client_datasets, sim: SimConfig, dispatch,
 
 def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
                   dispatch, heap, evaluate, result: SimResult, data_sizes,
-                  align, psa_cfg, calib_batch, receive_hook) -> float:
+                  align, psa_cfg, calib_batch, receive_hook,
+                  digest_fn=None) -> float:
     """Batched drain: train completion waves as single device calls.
 
     A wave is the maximal heap prefix with ``t_done < t_first + latency_lo``
@@ -381,7 +426,8 @@ def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
     stacked = StackedClients.from_datasets(client_datasets)
     engine = CohortEngine(cfg, stacked, spec, init_params,
                           local_epochs=sim.local_epochs,
-                          batch_size=sim.batch_size, align=align)
+                          batch_size=sim.batch_size, align=align,
+                          mesh=sim.mesh, rules=sim.rules)
     sketch_flat = None
     if server.needs_sketch:
         sketch_flat = make_sketch_fn_flat(cfg, calib_batch, psa_cfg, spec)
@@ -455,6 +501,8 @@ def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
                     [float(data_sizes[ev.cid]) for ev in ok],
                     [ev.version for ev in ok],
                     None if sketches is None else sketches[r0:r1])
+                if digest_fn is not None:
+                    result.digests.extend(digest_fn(snaps).tolist())
                 for ev, tau in zip(ok, taus):
                     result.receive_log.append(
                         {"t": ev.t_done, "tau": tau, "client": ev.cid})
@@ -514,7 +562,8 @@ def run_fedavg(cfg: ModelConfig, init_params, client_datasets: List[ClientDatase
         stacked = StackedClients.from_datasets(client_datasets)
         engine = CohortEngine(cfg, stacked, spec, init_params,
                               local_epochs=sim.local_epochs,
-                              batch_size=sim.batch_size, prox=prox)
+                              batch_size=sim.batch_size, prox=prox,
+                              mesh=sim.mesh, rules=sim.rules)
         flat = jnp.array(spec.flatten(init_params), copy=True)
         params = None
     else:
@@ -529,6 +578,7 @@ def run_fedavg(cfg: ModelConfig, init_params, client_datasets: List[ClientDatase
             result.accuracies.append(acc)
             next_eval += sim.eval_every
         chosen = rng.choice(sim.num_clients, size=m, replace=False)
+        result.launched += len(chosen)
         round_time = max(latency(int(c)) for c in chosen)
         if use_avail:
             ok = [bool(rng.rand() < avail[int(c)]) for c in chosen]

@@ -38,9 +38,15 @@ def _buffer_agg_kernel(w_ref, g_ref, u_ref, out_ref):
 def buffer_agg_pallas(weights: jnp.ndarray, global_vec: jnp.ndarray,
                       updates: jnp.ndarray, *, block: int = DEFAULT_BLOCK,
                       interpret: Optional[bool] = None) -> jnp.ndarray:
-    """weights (L,), global_vec (d,), updates (L, d) -> (d,) f32."""
+    """weights (L,), global_vec (d,), updates (L, d) -> (d,) f32.
+
+    Layout-agnostic: under the d-sharded server this runs per-shard on the
+    local ``d_local`` slice (the weighted sum is elementwise over d, so no
+    cross-shard traffic). The block clamps to the vector width so a small
+    shard is not padded out to the full 8k-lane default."""
     interpret = resolve_interpret(interpret)
     L, d = updates.shape
+    block = min(block, -(-d // 1024) * 1024)
     n = -(-d // block)
     dp = n * block
     gv = jnp.pad(global_vec.astype(jnp.float32), [(0, dp - d)])

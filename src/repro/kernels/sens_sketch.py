@@ -41,7 +41,7 @@ def _pcg(x):
 
 
 def _sens_sketch_kernel(theta_ref, g_ref, f_ref, out_ref, *, k: int,
-                        seed: int, block: int):
+                        seed: int, block: int, index_offset: int):
     pid = pl.program_id(0)
 
     @pl.when(pid == 0)
@@ -54,7 +54,8 @@ def _sens_sketch_kernel(theta_ref, g_ref, f_ref, out_ref, *, k: int,
     # Eq. 8 sensitivity, fused
     s = jnp.abs(g * theta - 0.5 * f * jnp.square(theta))
 
-    lin = pid.astype(jnp.uint32) * jnp.uint32(block) + \
+    lin = jnp.uint32(index_offset) + \
+        pid.astype(jnp.uint32) * jnp.uint32(block) + \
         jax.lax.broadcasted_iota(jnp.uint32, (block,), 0)
     seed_u = jnp.uint32(seed)
     partial = []
@@ -68,6 +69,7 @@ def _sens_sketch_kernel(theta_ref, g_ref, f_ref, out_ref, *, k: int,
 def sens_sketch_pallas(theta: jnp.ndarray, g: jnp.ndarray, f: jnp.ndarray,
                        *, k: int = 16, seed: int = 0,
                        block: int = DEFAULT_BLOCK,
+                       index_offset: int = 0,
                        interpret: Optional[bool] = None) -> jnp.ndarray:
     """Fused sensitivity+sketch of FLAT vectors theta/g/f -> (k,) f32.
 
@@ -75,16 +77,24 @@ def sens_sketch_pallas(theta: jnp.ndarray, g: jnp.ndarray, f: jnp.ndarray,
     they contribute nothing regardless of their projection sign). The result
     includes the 1/sqrt(k) JL scale, matching ``repro.core.sketch``.
     ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
+
+    ``index_offset`` shifts the Rademacher hash to GLOBAL parameter indices:
+    a caller holding shard ``theta[o : o + d_local]`` of a d-sharded flat
+    vector passes ``index_offset=o``, and the psum of the per-shard partial
+    sketches equals the single-device sketch of the full vector exactly
+    (the projection sign of element i depends only on its global index).
     """
     interpret = resolve_interpret(interpret)
     (d,) = theta.shape
+    block = min(block, -(-d // 1024) * 1024)  # don't pad small shards to 8k
     n = -(-d // block)
     dp = n * block
     pad = [(0, dp - d)]
     theta, g, f = (jnp.pad(x.astype(jnp.float32), pad) for x in (theta, g, f))
 
     out = pl.pallas_call(
-        functools.partial(_sens_sketch_kernel, k=k, seed=seed, block=block),
+        functools.partial(_sens_sketch_kernel, k=k, seed=seed, block=block,
+                          index_offset=index_offset),
         grid=(n,),
         in_specs=[
             pl.BlockSpec((block,), lambda i: (i,)),

@@ -27,6 +27,26 @@ from repro.common.sharding import (EXPERT_TP_RULES, PRODUCTION_RULES,
 from repro.models.config import ModelConfig
 
 
+def make_fed_mesh(num_devices: Optional[int] = None, axis: str = "d") -> Mesh:
+    """One-axis mesh for the federated policy server / cohort engine.
+
+    The federated stack shards exactly one thing — the flat ``(d,)``
+    parameter axis of ``ServerState`` (and, data-parallel, the client axis
+    of a completion wave) — so its mesh is a single named axis over however
+    many devices are available (or the first ``num_devices`` of them). On a
+    CPU box, virtual devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else int(num_devices)
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"make_fed_mesh: asked for {n} devices, have {len(devices)} "
+            f"(on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n})")
+    return Mesh(np.asarray(devices[:n]), (axis,))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

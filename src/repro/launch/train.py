@@ -73,16 +73,24 @@ def main():
     ap.add_argument("--gamma", type=float, default=5.0)
     ap.add_argument("--delta", type=float, default=0.5)
     ap.add_argument("--sketch-k", type=int, default=16)
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="shard the policy server (and train waves "
+                         "data-parallel) over an N-device mesh; on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--out", default="artifacts/runs")
     args = ap.parse_args()
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_fed_mesh
+        mesh = make_fed_mesh(args.mesh)
     cfg, clients, test, calib = build_task(
         args.model, args.samples, args.alpha, args.clients, args.seed, args.calib)
     params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
     sim = SimConfig(num_clients=args.clients, concurrency=args.concurrency,
                     horizon=args.horizon, latency_kind=args.latency,
                     latency_lo=args.lat_lo, latency_hi=args.lat_hi,
-                    seed=args.seed)
+                    seed=args.seed, mesh=mesh)
     psa = PSAConfig(buffer_size=args.buffer, queue_len=args.queue,
                     gamma=args.gamma, delta=args.delta, sketch_k=args.sketch_k)
     t0 = time.time()
@@ -91,13 +99,15 @@ def main():
     wall = time.time() - t0
     os.makedirs(args.out, exist_ok=True)
     name = f"{args.alg}_{args.model}_a{args.alpha}_{args.latency}{int(args.lat_hi)}_s{args.seed}"
+    if args.mesh:
+        name += f"_mesh{args.mesh}"
     rec = {
         "alg": args.alg, "model": args.model, "alpha": args.alpha,
         "latency": [args.latency, args.lat_lo, args.lat_hi],
         "final_accuracy": res.final_accuracy, "aulc": res.aulc,
         "versions": res.versions, "dispatches": res.dispatches,
         "times": res.times, "accuracies": res.accuracies,
-        "wall_s": round(wall, 1),
+        "wall_s": round(wall, 1), "mesh_devices": args.mesh or None,
     }
     path = os.path.join(args.out, name + ".json")
     with open(path, "w") as f:

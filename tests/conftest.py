@@ -1,4 +1,25 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_collection_modifyitems(config, items):
+    """Tiering: everything that is neither ``slow`` nor ``multidevice`` is
+    the ``tier1`` gate; ``multidevice`` tests auto-skip on single-device
+    hosts (CI's second matrix entry forces 4 virtual CPU devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``)."""
+    import jax
+
+    ndev = jax.device_count()
+    skip_multi = pytest.mark.skip(
+        reason=f"needs >= 2 jax devices, have {ndev} (set XLA_FLAGS="
+               "--xla_force_host_platform_device_count=4)")
+    for item in items:
+        multi = "multidevice" in item.keywords
+        if multi and ndev < 2:
+            item.add_marker(skip_multi)
+        if not multi and "slow" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)

@@ -1,0 +1,217 @@
+"""Golden-trajectory regression suite: the paper reproduction, pinned.
+
+For every async policy, a fixed-seed QUICK world is run on the sequential
+oracle and its trajectory is *checked in* as a digest stream
+(``tests/golden/<policy>.json``): one ``(||w||_2, probe·w)`` fingerprint of
+the flat global vector per applied receive, plus the run's final metrics.
+The suite then asserts that every execution path — the sequential oracle
+itself, the batched cohort engine, and the mesh-sharded server on a 2- and
+4-virtual-device CPU mesh — reproduces those digests within float
+tolerance. Any layout, kernel, or policy change that silently drifts the
+numerics fails here instead of in the paper's tables.
+
+Regenerate after an *intentional* numerical change with::
+
+    make golden-regen        # runs this file with --regen
+
+and commit the resulting ``tests/golden/`` diff (CI re-derives the digests
+and fails if the committed files are stale).
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config                       # noqa: E402
+from repro.core import PSAConfig                           # noqa: E402
+from repro.data import (ClientDataset, dirichlet_partition,  # noqa: E402
+                        make_calibration_batch, make_classification,
+                        train_test_split)
+from repro.federated import SimConfig, run_algorithm       # noqa: E402
+from repro.federated.policies import POLICY_NAMES          # noqa: E402
+from repro.launch.mesh import make_fed_mesh                # noqa: E402
+from repro.models import model as M                        # noqa: E402
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+# The golden world. Changing ANY of these constants invalidates the
+# checked-in digests — regenerate and commit.
+WORLD = dict(model="paper-synthetic-mlp", samples=1_500, classes=10, dim=32,
+             clients=8, alpha=0.3, seed=0)
+SIM = dict(num_clients=8, horizon=6_000.0, eval_every=3_000.0, seed=0)
+PSA = dict(queue_len=10)   # queue fills mid-run: covers both weight phases
+
+# Digests are compared loosely enough to absorb reduction-order float noise
+# (engine/layout differences measure ~1e-6 relative) and tightly enough
+# that any behavioral change — a weighting rule, a staleness resolution, a
+# buffer slot — lands far outside the band within a handful of steps.
+RTOL, ATOL = 1e-4, 1e-3
+
+
+def _build_world():
+    cfg = get_config(WORLD["model"])
+    full = make_classification(WORLD["samples"], WORLD["classes"],
+                               WORLD["dim"], seed=WORLD["seed"],
+                               class_sep=0.7)
+    train, test = train_test_split(full, 0.1)
+    parts = dirichlet_partition(train, WORLD["clients"],
+                                alpha=WORLD["alpha"], seed=WORLD["seed"])
+    clients = [ClientDataset(train.subset(ix)) for ix in parts]
+    calib = make_calibration_batch(train, 64, "gaussian")
+    params = M.init_params(jax.random.PRNGKey(WORLD["seed"]), cfg)
+    return cfg, clients, test, calib, params
+
+
+@pytest.fixture(scope="module")
+def world():
+    return _build_world()
+
+
+def _run(world, name, engine, mesh=None):
+    cfg, clients, test, calib, params = world
+    kw = {}
+    if name == "fedpsa":
+        kw = dict(psa_cfg=PSAConfig(**PSA), calib_batch=calib)
+    sim = SimConfig(engine=engine, mesh=mesh, record_trajectory=True, **SIM)
+    return run_algorithm(name, cfg, params, clients, test, sim, **kw)
+
+
+def _golden_path(name):
+    return os.path.join(GOLDEN_DIR, f"{name}.json")
+
+
+def _load(name):
+    path = _golden_path(name)
+    assert os.path.exists(path), \
+        f"missing golden digests {path} — run `make golden-regen` and commit"
+    with open(path) as f:
+        return json.load(f)
+
+
+def _final(result):
+    return {"final_accuracy": result.final_accuracy,
+            "versions": result.versions,
+            "dispatches": result.dispatches,
+            "dropped": result.dropped,
+            "launched": result.launched}
+
+
+def _check(result, golden):
+    want = golden["digests"]
+    assert len(result.digests) == len(want), \
+        (len(result.digests), len(want))
+    np.testing.assert_allclose(np.asarray(result.digests),
+                               np.asarray(want), rtol=RTOL, atol=ATOL)
+    final = _final(result)
+    for key in ("versions", "dispatches", "dropped", "launched"):
+        assert final[key] == golden["final"][key], key
+    np.testing.assert_allclose(final["final_accuracy"],
+                               golden["final"]["final_accuracy"], atol=2e-3)
+    # the curve shape, not just its endpoint (catches eval-grid drift)
+    np.testing.assert_allclose(result.aulc, golden["final"]["aulc"],
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("name", POLICY_NAMES)
+def test_sequential_matches_golden(world, name):
+    """The oracle itself reproduces its checked-in trajectory."""
+    _check(_run(world, name, "sequential"), _load(name))
+
+
+@pytest.mark.parametrize("name", POLICY_NAMES)
+def test_cohort_matches_golden(world, name):
+    """The batched cohort engine reproduces the oracle's digests."""
+    _check(_run(world, name, "cohort"), _load(name))
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("ndev", (2, 4))
+@pytest.mark.parametrize("name", POLICY_NAMES)
+def test_sharded_matches_golden(world, name, ndev):
+    """The mesh-sharded server + data-parallel cohort engine reproduce the
+    same digests on 2- and 4-device CPU meshes
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=4``)."""
+    if jax.device_count() < ndev:
+        pytest.skip(f"needs {ndev} devices, have {jax.device_count()}")
+    _check(_run(world, name, "cohort", mesh=make_fed_mesh(ndev)), _load(name))
+
+
+def test_golden_digests_are_committed():
+    """Every policy has its digest file (regen writes all seven at once)."""
+    for name in POLICY_NAMES:
+        assert os.path.exists(_golden_path(name)), name
+
+
+# ---------------------------------------------------------------------------
+# Regeneration entry point (make golden-regen)
+# ---------------------------------------------------------------------------
+
+def _round(x, sig=6):
+    """Quantize to 6 significant digits: far below the comparison tolerance,
+    above cross-run float noise, so regen on an unchanged tree is a no-op
+    diff (the CI staleness gate relies on this)."""
+    return float(f"{float(x):.{sig}g}")
+
+
+def regen():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    world = _build_world()
+    for name in POLICY_NAMES:
+        r = _run(world, name, "sequential")
+        final = _final(r)
+        final["final_accuracy"] = _round(final["final_accuracy"])
+        final["aulc"] = _round(r.aulc)
+        payload = {
+            "world": WORLD, "sim": SIM,
+            "psa": PSA if name == "fedpsa" else None,
+            "policy": name,
+            "digests": [[_round(a), _round(b)] for a, b in r.digests],
+            "final": final,
+        }
+        path = _golden_path(name)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+        print(f"wrote {path}  ({len(r.digests)} digests, "
+              f"acc={final['final_accuracy']:.4f})")
+
+
+def check() -> int:
+    """Staleness gate for CI: re-derive every policy's trajectory from the
+    sequential oracle and compare against the COMMITTED digests within the
+    suite's tolerance (never bitwise — float low bits differ across
+    BLAS/SIMD/jax builds, and a byte-diff gate would flap on them). Exits
+    non-zero when a numerical change landed without `make golden-regen` +
+    committing the ``tests/golden/`` diff."""
+    world = _build_world()
+    stale = []
+    for name in POLICY_NAMES:
+        try:
+            _check(_run(world, name, "sequential"), _load(name))
+        except AssertionError as e:
+            stale.append(name)
+            print(f"STALE {name}: {str(e).splitlines()[0]}", file=sys.stderr)
+        else:
+            print(f"ok {name}")
+    if stale:
+        print(f"golden digests stale for {stale} — run `make golden-regen` "
+              f"and commit tests/golden/", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        regen()
+    elif "--check" in sys.argv:
+        sys.exit(check())
+    else:
+        print("usage: python tests/test_golden.py --regen | --check",
+              file=sys.stderr)
+        sys.exit(2)

@@ -49,6 +49,28 @@ def test_sens_sketch_block_invariance():
                                    rtol=1e-4, atol=1e-4)
 
 
+def test_sens_sketch_shards_compose_via_index_offset():
+    """d-sharded contract: the sum of per-shard sketches computed with
+    ``index_offset`` set to each shard's global start equals the full-vector
+    sketch — the projection sign of element i depends only on its global
+    index, so per-shard partials psum to the exact single-device result."""
+    key = jax.random.PRNGKey(3)
+    d = 4096 + 640   # not a multiple of typical shard counts' blocks
+    theta, g = (jax.random.normal(jax.random.fold_in(key, i), (d,))
+                for i in range(2))
+    f = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (d,)))
+    full = sens_sketch_pallas(theta, g, f, k=8, seed=11, interpret=True)
+    for nshards in (2, 4):
+        bounds = np.linspace(0, d, nshards + 1).astype(int)
+        parts = [
+            sens_sketch_pallas(theta[lo:hi], g[lo:hi], f[lo:hi], k=8,
+                               seed=11, index_offset=int(lo), interpret=True)
+            for lo, hi in zip(bounds[:-1], bounds[1:])
+        ]
+        np.testing.assert_allclose(np.asarray(sum(parts)), np.asarray(full),
+                                   rtol=1e-4, atol=1e-4)
+
+
 def test_fused_tree_sketch_matches_core_pipeline():
     key = jax.random.PRNGKey(0)
     tree = {"a": jax.random.normal(key, (40, 30)),

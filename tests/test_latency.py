@@ -1,0 +1,174 @@
+"""Client availability scenarios (``federated/latency.py``).
+
+Unit-level: the per-client availability distributions behave as documented
+(bounds, means, the slow-fragile latency coupling). Sim-level:
+``slow-fragile`` runs drop at the configured rate, a held slot re-dispatches
+with the server version *current at the moment the slot frees* (checked
+exactly against the event stream), and ``availability_kind="always"``
+reproduces the dropout-free trajectory bit-for-bit regardless of
+``dropout_rate``.
+"""
+import heapq
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import (ClientDataset, dirichlet_partition,
+                        make_classification, train_test_split)
+from repro.federated import SimConfig, run_algorithm
+from repro.federated import simulator as sim_mod
+from repro.federated.latency import (AVAILABILITY_KINDS,
+                                     per_client_availability,
+                                     per_client_latency)
+
+# ---------------------------------------------------------------------------
+# Unit: availability distributions
+# ---------------------------------------------------------------------------
+
+
+def test_always_and_zero_rate_disable_dropout():
+    assert np.all(per_client_availability("always", 0.5, 20) == 1.0)
+    for kind in AVAILABILITY_KINDS:
+        assert np.all(per_client_availability(kind, 0.0, 20) == 1.0)
+
+
+def test_uniform_and_hetero_match_configured_rate():
+    p_u = per_client_availability("uniform", 0.3, 1000, seed=1)
+    np.testing.assert_allclose(p_u, 0.7)
+    p_h = per_client_availability("hetero", 0.3, 4000, seed=1)
+    assert np.all((0.0 <= p_h) & (p_h <= 1.0))
+    assert abs(p_h.mean() - 0.7) < 0.05        # Beta mean = 1 - rate
+    assert p_h.std() > 0.02                    # but chronically flaky tails
+
+
+def test_slow_fragile_couples_availability_to_latency():
+    _, means = per_client_latency("uniform", 10.0, 500.0, 50, seed=3)
+    p = per_client_availability("slow-fragile", 0.25, 50, seed=3,
+                                latency_means=means)
+    order = np.argsort(means)
+    # success prob decays monotonically with mean latency (affine in rank)
+    assert np.all(np.diff(p[order]) <= 1e-12)
+    assert p[order[0]] > 0.95 and p[order[-1]] < 0.6
+    assert np.all(p >= 0.05)
+    with pytest.raises(ValueError, match="latency_means"):
+        per_client_availability("slow-fragile", 0.25, 50)
+
+
+def test_availability_validation():
+    with pytest.raises(ValueError, match="dropout_rate"):
+        per_client_availability("uniform", 1.5, 10)
+    with pytest.raises(ValueError, match="unknown availability"):
+        per_client_availability("nope", 0.2, 10)
+
+
+# ---------------------------------------------------------------------------
+# Sim-level scenarios
+# ---------------------------------------------------------------------------
+
+QUICK = dict(num_clients=12, horizon=9_000.0, eval_every=4_500.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("paper-synthetic-mlp")
+    full = make_classification(1_200, 10, 32, seed=0, class_sep=0.7)
+    train, test = train_test_split(full, 0.1)
+    parts = dirichlet_partition(train, QUICK["num_clients"], alpha=0.3,
+                                seed=0)
+    clients = [ClientDataset(train.subset(ix)) for ix in parts]
+    params = M_init(cfg)
+    return cfg, clients, test, params
+
+
+def M_init(cfg):
+    from repro.models import model as M
+    return M.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def test_slow_fragile_drops_at_configured_rate(world):
+    """Empirical drop fraction tracks dropout_rate (slow clients also hold
+    their slots longer, so the dispatch-weighted rate sits near the mean)."""
+    cfg, clients, test, params = world
+    rate = 0.3
+    r = run_algorithm("fedasync", cfg, params, clients, test,
+                      SimConfig(availability_kind="slow-fragile",
+                                dropout_rate=rate, **QUICK))
+    frac = r.dropped / max(1, r.dropped + r.dispatches)
+    assert r.dropped > 0
+    assert 0.08 <= frac <= 0.55, frac
+    assert r.launched == max(1, round(0.2 * QUICK["num_clients"])) + \
+        r.dispatches + r.dropped
+
+
+def test_held_slots_redispatch_with_current_version(world):
+    """A failed dispatch holds its slot, then re-dispatches with the server
+    version current at the time the slot frees. Verified exactly: record
+    every heap push; replacement j (after the initial concurrency block)
+    happens when processing the j-th completed event, so its
+    version-at-dispatch must equal the number of global updates applied by
+    the events processed up to then (fedasync: one update per ok receive)."""
+    cfg, clients, test, params = world
+    pushed = []
+    orig_push = heapq.heappush
+
+    def spy_push(h, ev):
+        if isinstance(ev, sim_mod._Event):
+            pushed.append(ev)
+        return orig_push(h, ev)
+
+    sim_mod.heapq.heappush = spy_push
+    try:
+        r = run_algorithm("fedasync", cfg, params, clients, test,
+                          SimConfig(availability_kind="hetero",
+                                    dropout_rate=0.35,
+                                    engine="sequential", **QUICK))
+    finally:
+        sim_mod.heapq.heappush = orig_push
+    assert r.dropped > 0
+    conc = max(1, round(0.2 * QUICK["num_clients"]))
+    assert len(pushed) == r.launched
+    # replay: events are processed in (t_done, seq) heap order; replacement
+    # conc + j is pushed while processing the j-th processed event
+    processed = sorted(pushed, key=lambda e: (e.t_done, e.seq))
+    version = 0
+    n_replacements = len(pushed) - conc
+    for j in range(n_replacements):
+        ev = processed[j]
+        if ev.ok:
+            version += 1        # fedasync: every receive bumps the version
+        replacement = pushed[conc + j]
+        assert replacement.version == version, (j, ev.ok)
+    # in particular every dropped event's replacement carried the version
+    # that was current when its slot freed — asserted above for ok=False
+
+
+def test_always_reproduces_dropout_free_trajectory(world):
+    """``availability_kind='always'`` must ignore dropout_rate entirely and
+    reproduce the default (pre-availability-modelling) trajectory: same RNG
+    stream, same receive log, same curve."""
+    cfg, clients, test, params = world
+    base = run_algorithm("fedbuff", cfg, params, clients, test,
+                         SimConfig(**QUICK))
+    always = run_algorithm("fedbuff", cfg, params, clients, test,
+                           SimConfig(availability_kind="always",
+                                     dropout_rate=0.7, **QUICK))
+    assert base.receive_log == always.receive_log
+    assert base.times == always.times
+    assert base.accuracies == always.accuracies
+    assert base.final_accuracy == always.final_accuracy
+    assert always.dropped == 0
+
+
+def test_dropout_identical_across_engines(world):
+    cfg, clients, test, params = world
+    kw = dict(availability_kind="slow-fragile", dropout_rate=0.3, **QUICK)
+    seq = run_algorithm("fedbuff", cfg, params, clients, test,
+                        SimConfig(engine="sequential", **kw))
+    coh = run_algorithm("fedbuff", cfg, params, clients, test,
+                        SimConfig(engine="cohort", **kw))
+    assert seq.dropped == coh.dropped > 0
+    assert seq.receive_log == coh.receive_log
+    np.testing.assert_allclose(coh.final_accuracy, seq.final_accuracy,
+                               atol=1e-4)

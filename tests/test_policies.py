@@ -73,6 +73,43 @@ def test_policy_matches_legacy_trajectory(name, kwargs):
     assert srv_legacy.version > 0
 
 
+@pytest.mark.parametrize("name,kwargs,L", [
+    # L=1: every push is also a flush (ring degenerates to a single slot)
+    ("fedbuff", {"buffer_size": 1}, 1),
+    ("ca2fl", {"buffer_size": 1}, 1),
+    ("fedfa", {"queue_len": 1}, 1),
+    ("fedpac", {"buffer_size": 1}, 1),
+    # wrap-around: stream long enough for > 2L pushes through the ring
+    ("fedbuff", {"buffer_size": 3}, 3),
+    ("ca2fl", {"buffer_size": 4}, 4),
+    ("fedfa", {"queue_len": 3}, 3),
+])
+def test_ring_buffer_edge_cases(name, kwargs, L):
+    """Stacked-ring edge cases vs the legacy deque/list oracles: a stream
+    whose length is an exact multiple of L (buffer exactly full at the final
+    flush) and longer than 2L (slot indices wrap at least twice)."""
+    params = _params()
+    kw = dict(kwargs)
+    if name == "ca2fl":
+        kw["num_clients"] = 5
+    srv_legacy = legacy.make_legacy_server(name, params, **kw)
+    srv_policy = servers.make_server(name, params, **kw)
+    n = max(3 * L, 2 * L + 2)
+    n -= n % L    # exact multiple: the last arrival lands on a flush
+    flushes = 0
+    for delta, client, meta in _arrival_stream(params, n):
+        u_legacy = srv_legacy.receive(delta, client, meta)
+        u_policy = srv_policy.receive(delta, client, meta)
+        assert u_legacy == u_policy
+        flushes += int(u_policy)
+        assert _max_param_diff(srv_legacy.params, srv_policy.params) < 1e-5
+    assert srv_legacy.version == srv_policy.version
+    if name == "fedfa":
+        assert flushes == n          # refreshes on every arrival
+    else:
+        assert flushes == n // L     # flushes exactly when the ring fills
+
+
 def test_fedpsa_policy_matches_legacy_trajectory():
     params = _params()
     cfg = PSAConfig(buffer_size=3, queue_len=5, sketch_k=8)

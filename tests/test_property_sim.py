@@ -1,0 +1,164 @@
+"""Simulator wave invariants, fuzzed over latency/availability draws.
+
+The batched (cohort) drain trains whole completion waves up front, which is
+only sound if every wave is *re-dispatch-safe*: each arrival must have
+trained from exactly the global snapshot that existed at its
+version-at-dispatch, no matter how receives, dropouts, and eval boundaries
+interleave. These tests check that directly — instrumenting
+``CohortEngine.cohort_update`` (what was trained from) and
+``PolicyServer.receive_many`` (what version each arrival claimed) and
+requiring the trained bytes to equal the recorded snapshot of that version
+— plus the bookkeeping invariants: event times monotone, and
+``launched == concurrency + completions + dropped`` (every processed event
+re-dispatches exactly once; the remainder is still in flight at the
+horizon).
+
+Deterministic parametrized draws always run; with ``hypothesis`` installed
+(``requirements-dev.txt``) the same invariant is fuzzed over random
+latency/dropout configurations.
+"""
+import hashlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import (ClientDataset, dirichlet_partition,
+                        make_classification, train_test_split)
+from repro.federated import SimConfig, run_algorithm
+from repro.federated import cohort as cohort_mod
+from repro.federated import servers as servers_mod
+from repro.models import model as M
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+NUM_CLIENTS = 6
+CONCURRENCY = max(1, int(round(0.2 * NUM_CLIENTS)))
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("paper-synthetic-mlp")
+    full = make_classification(800, 10, 32, seed=0, class_sep=0.7)
+    train, test = train_test_split(full, 0.1)
+    parts = dirichlet_partition(train, NUM_CLIENTS, alpha=0.3, seed=0)
+    clients = [ClientDataset(train.subset(ix)) for ix in parts]
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, clients, test, params
+
+
+def _sim(seed, latency_kind, availability_kind, dropout_rate, engine):
+    return SimConfig(num_clients=NUM_CLIENTS, horizon=3_500.0,
+                     eval_every=1_750.0, seed=seed,
+                     latency_kind=latency_kind,
+                     availability_kind=availability_kind,
+                     dropout_rate=dropout_rate, engine=engine,
+                     record_trajectory=True)
+
+
+def _digest(row) -> bytes:
+    return hashlib.md5(np.ascontiguousarray(np.asarray(row)).tobytes()).digest()
+
+
+def _run_cohort_instrumented(world, sim):
+    """Run the cohort engine while recording (a) the byte-exact snapshot
+    every trained arrival started from and (b) the snapshot the server held
+    at every global version; returns (result, trained, vdisp, by_version)."""
+    cfg, clients, test, params = world
+    trained, vdisp = [], []
+    by_version = {}
+    orig_update = cohort_mod.CohortEngine.cohort_update
+    orig_many = servers_mod.PolicyServer.receive_many
+
+    def spy_update(self, params_stack, cids, lrs, seeds):
+        trained.extend(_digest(r) for r in np.asarray(params_stack))
+        return orig_update(self, params_stack, cids, lrs, seeds)
+
+    def spy_many(self, deltas, client_params, cids, sizes, v_dispatch,
+                 sketches=None):
+        by_version.setdefault(self._version, _digest(self.flat_params))
+        vdisp.extend(int(v) for v in v_dispatch)
+        v = self._version
+        upd, taus, snaps = orig_many(self, deltas, client_params, cids,
+                                     sizes, v_dispatch, sketches)
+        rows = np.asarray(snaps)
+        for i in range(rows.shape[0]):
+            if upd[i]:
+                v += 1
+            by_version[v] = _digest(rows[i])
+        return upd, taus, snaps
+
+    cohort_mod.CohortEngine.cohort_update = spy_update
+    servers_mod.PolicyServer.receive_many = spy_many
+    try:
+        result = run_algorithm("fedbuff", cfg, params, clients, test, sim)
+    finally:
+        cohort_mod.CohortEngine.cohort_update = orig_update
+        servers_mod.PolicyServer.receive_many = orig_many
+    return result, trained, vdisp, by_version
+
+
+def _check_invariants(world, seed, latency_kind, availability_kind,
+                      dropout_rate):
+    cfg, clients, test, params = world
+    seq = run_algorithm("fedbuff", cfg, params, clients, test,
+                        _sim(seed, latency_kind, availability_kind,
+                             dropout_rate, "sequential"))
+    coh, trained, vdisp, by_version = _run_cohort_instrumented(
+        world, _sim(seed, latency_kind, availability_kind, dropout_rate,
+                    "cohort"))
+
+    # -- re-dispatch safety: each arrival trained from the exact snapshot
+    #    of its version-at-dispatch
+    assert len(trained) == len(vdisp) == coh.dispatches
+    for j, (got, v) in enumerate(zip(trained, vdisp)):
+        assert got == by_version[v], (j, v)
+
+    # -- event times monotone
+    t_recv = [e["t"] for e in coh.receive_log]
+    assert all(a <= b for a, b in zip(t_recv, t_recv[1:]))
+    assert all(a < b for a, b in zip(coh.times, coh.times[1:]))
+
+    # -- dispatch accounting: every processed event re-dispatches once
+    for r in (seq, coh):
+        assert r.launched == CONCURRENCY + r.dispatches + r.dropped
+
+    # -- the batched drain is the sequential oracle
+    assert [(e["t"], e["client"], e["tau"]) for e in seq.receive_log] == \
+           [(e["t"], e["client"], e["tau"]) for e in coh.receive_log]
+    assert (seq.dispatches, seq.dropped, seq.versions, seq.launched) == \
+           (coh.dispatches, coh.dropped, coh.versions, coh.launched)
+    assert len(seq.digests) == len(coh.digests)
+    np.testing.assert_allclose(np.asarray(coh.digests),
+                               np.asarray(seq.digests), rtol=1e-4, atol=1e-4)
+    assert seq.dispatches > 0
+
+
+@pytest.mark.parametrize("seed,latency_kind,availability_kind,dropout_rate", [
+    (0, "uniform", "always", 0.0),
+    (1, "longtail", "hetero", 0.3),
+    (2, "uniform", "slow-fragile", 0.25),
+])
+def test_wave_invariants_fixed_draws(world, seed, latency_kind,
+                                     availability_kind, dropout_rate):
+    _check_invariants(world, seed, latency_kind, availability_kind,
+                      dropout_rate)
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 10_000),
+           latency_kind=st.sampled_from(["uniform", "longtail"]),
+           availability_kind=st.sampled_from(
+               ["always", "uniform", "hetero", "slow-fragile"]),
+           dropout_rate=st.floats(0.05, 0.45))
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    def test_wave_invariants_fuzzed(world, seed, latency_kind,
+                                    availability_kind, dropout_rate):
+        _check_invariants(world, seed, latency_kind, availability_kind,
+                          dropout_rate)
