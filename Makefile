@@ -43,10 +43,13 @@ bench-smoke:
 	$(PY) -m benchmarks.kernel_micro
 
 # Simulator dispatch throughput: legacy per-client loop vs the cohort
-# engine; writes artifacts/bench/BENCH_sim_throughput.json. Narrow with
-# e.g. SIM_BENCH_CLIENTS=50,500.
+# engine; writes artifacts/bench/BENCH_sim_throughput.json, then the
+# per-model-family sweep (paper MLP + the fed-lm dense/ssm/moe smokes) to
+# BENCH_sim_throughput_family.json. Narrow with e.g. SIM_BENCH_CLIENTS=50,
+# SIM_BENCH_FAMILIES=..., SIM_BENCH_FAMILY_CLIENTS=64.
 bench-sim:
 	$(PY) -m benchmarks.sim_throughput
+	$(PY) -m benchmarks.sim_throughput --family
 
 bench:
 	$(PY) -m benchmarks.run

@@ -17,6 +17,13 @@ data-parallel over the client axis) — so the artifact records sharded vs
 replicated dispatch throughput side by side. On a CPU box combine with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (virtual devices:
 expect layout overhead, not speedup — the point is the measurement).
+
+``--family [LIST]`` switches to the model-family sweep: one cell per
+architecture (default the paper MLP plus the three fed-lm families —
+override with a comma list or SIM_BENCH_FAMILIES), cohort vs sequential at
+a fixed client count (SIM_BENCH_FAMILY_CLIENTS, default 50), written to
+artifacts/bench/BENCH_sim_throughput_family.json. Gate (ISSUE 4): cohort
+>= 3x sequential on the fed-lm-smoke scenario.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ from repro.configs import get_config
 from repro.data import ClientDataset, make_classification
 from repro.federated import SimConfig, run_async
 from repro.launch.mesh import make_fed_mesh
+from repro.launch.train import build_task
 from repro.models import model as model_lib
 from benchmarks import common
 
@@ -93,6 +101,7 @@ def bench_cell(num_clients: int, mesh=None) -> dict:
         t0 = time.perf_counter()
         res = run_async("fedasync", cfg, params, clients, test, sim)
         wall = time.perf_counter() - t0
+        assert res.engine == engine, (label, res.engine)  # no silent fallback
         cell[label] = {
             "dispatches": res.dispatches,
             "wall_s": wall,
@@ -116,12 +125,105 @@ def bench_cell(num_clients: int, mesh=None) -> dict:
     return cell
 
 
+DEFAULT_FAMILIES = ("paper-synthetic-mlp,fed-lm-smoke,"
+                    "fed-lm-ssm-smoke,fed-lm-moe-smoke")
+# The family sweep measures the overhead-bound many-small-clients regime
+# the simulator targets: 96 sequences / batch 2 x 5 epochs = ~215 local SGD
+# steps per dispatch on the tiny fed-lm smokes, 256 clients (wave ~16),
+# ~60+ timed dispatches per engine. Transformer local steps are real device
+# math even at smoke scale, so the per-family gate (>=3x) only applies at
+# the default client count — a reduced SIM_BENCH_FAMILY_CLIENTS smoke run
+# (CI) records the cells without gating, like SIM_BENCH_CLIENTS does.
+FAMILY_SAMPLES_PER_CLIENT = 96
+FAMILY_BATCH_SIZE = 2
+FAMILY_NUM_CLIENTS = 256
+FAMILY_TARGET_DISPATCHES = 60
+SEQ_LEN = 8
+
+
+def bench_family_cell(arch: str, num_clients: int) -> dict:
+    """Cohort vs sequential for one architecture's federated scenario
+    (image families get the classification world, token families the
+    LM fine-tuning world), equal-size client shards."""
+    cfg, clients, test, _calib = build_task(
+        arch, num_clients * FAMILY_SAMPLES_PER_CLIENT, alpha=0.0,
+        num_clients=num_clients, seed=0, seq_len=SEQ_LEN)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    horizon = horizon_for(num_clients, FAMILY_TARGET_DISPATCHES)
+    cell = {"arch": arch, "family": cfg.family, "num_clients": num_clients,
+            "horizon": horizon,
+            "mean_shard": float(np.mean([len(c) for c in clients]))}
+    def fam_sim(h, engine):
+        return SimConfig(
+            num_clients=num_clients, concurrency=0.2,
+            local_epochs=LOCAL_EPOCHS, batch_size=FAMILY_BATCH_SIZE,
+            horizon=h, eval_every=h, latency_kind="uniform",
+            latency_lo=LATENCY_LO, latency_hi=LATENCY_HI, seed=0,
+            eval_batches=2, engine=engine)
+
+    for engine in ("sequential", "cohort"):
+        sim = fam_sim(horizon, engine)
+        # full-length warmup, as in bench_cell: every wave bucket the timed
+        # run hits is already compiled for both engines
+        run_async("fedasync", cfg, params, clients, test, sim)
+        t0 = time.perf_counter()
+        res = run_async("fedasync", cfg, params, clients, test, sim)
+        wall = time.perf_counter() - t0
+        assert res.engine == engine, (arch, res.engine)  # no silent fallback
+        cell[engine] = {
+            "dispatches": res.dispatches,
+            "wall_s": wall,
+            "dispatches_per_s": res.dispatches / wall,
+            "cohorts": res.cohorts,
+            "final_accuracy": res.final_accuracy,
+        }
+        print(f"sim_throughput,arch={arch},engine={engine},"
+              f"dispatches={res.dispatches},wall_s={wall:.2f},"
+              f"dps={res.dispatches / wall:.2f}", flush=True)
+    cell["speedup"] = (cell["cohort"]["dispatches_per_s"]
+                       / cell["sequential"]["dispatches_per_s"])
+    print(f"sim_throughput,arch={arch},speedup={cell['speedup']:.2f}x",
+          flush=True)
+    return cell
+
+
+def run_family_bench(families: str) -> int:
+    num_clients = int(os.environ.get("SIM_BENCH_FAMILY_CLIENTS",
+                                     str(FAMILY_NUM_CLIENTS)))
+    archs = (os.environ.get("SIM_BENCH_FAMILIES", DEFAULT_FAMILIES)
+             if families == "all" else families).split(",")
+    cells = [bench_family_cell(a.strip(), num_clients) for a in archs if a]
+    payload = {
+        "backend": jax.default_backend(),
+        "num_clients": num_clients,
+        "local_epochs": LOCAL_EPOCHS,
+        "batch_size": FAMILY_BATCH_SIZE,
+        "seq_len": SEQ_LEN,
+        "cells": cells,
+    }
+    path = common.save("BENCH_sim_throughput_family", payload)
+    print(f"wrote {path}")
+    gate = [c for c in cells if c["arch"] == "fed-lm-smoke"]
+    if (gate and num_clients >= FAMILY_NUM_CLIENTS
+            and gate[0]["speedup"] < 3.0):
+        print(f"WARNING: fed-lm-smoke speedup is "
+              f"{gate[0]['speedup']:.2f}x < 3x", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", type=int, default=0, metavar="N",
                     help="also run the cohort engine with an N-device "
                          "sharded policy server per cell (0 = off)")
+    ap.add_argument("--family", nargs="?", const="all", default=None,
+                    metavar="LIST",
+                    help="run the per-model-family sweep instead (comma "
+                         "list of arch ids; bare flag = the default set)")
     args = ap.parse_args(argv)
+    if args.family:
+        return run_family_bench(args.family)
     mesh = None
     if args.mesh:
         try:

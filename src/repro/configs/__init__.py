@@ -21,6 +21,10 @@ _ARCH_MODULES = {
     "internvl2-1b": "repro.configs.internvl2_1b",
     "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a27b",
     "arctic-480b": "repro.configs.arctic_480b",
+    # federated LM fine-tuning scenario (CPU-trainable smokes per family)
+    "fed-lm-smoke": "repro.configs.fed_lm",
+    "fed-lm-ssm-smoke": "repro.configs.fed_lm",
+    "fed-lm-moe-smoke": "repro.configs.fed_lm",
     # paper models
     "paper-mnist-cnn": "repro.configs.paper_models",
     "paper-fmnist-linear": "repro.configs.paper_models",
@@ -29,11 +33,14 @@ _ARCH_MODULES = {
     "paper-synthetic-mlp": "repro.configs.paper_models",
 }
 
-ASSIGNED = [k for k in _ARCH_MODULES if not k.startswith("paper-")]
+ASSIGNED = [k for k in _ARCH_MODULES
+            if not k.startswith(("paper-", "fed-lm"))]
 
 
 def get_config(arch: str) -> ModelConfig:
-    if arch.endswith("-smoke"):
+    # explicit registrations win over the "-smoke => reduced()" convention
+    # (the fed-lm-* scenario configs are themselves registered smokes)
+    if arch not in _ARCH_MODULES and arch.endswith("-smoke"):
         return get_config(arch[: -len("-smoke")]).reduced()
     if arch not in _ARCH_MODULES:
         raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")

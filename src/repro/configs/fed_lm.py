@@ -1,0 +1,47 @@
+"""Federated LM fine-tuning scenario configs (the AsyncFedED regime).
+
+Related work evaluates staleness policies where update cost and parameter
+count are large — federated language-model fine-tuning. These are the
+CPU-trainable smoke instances of that scenario: one tiny config per
+non-paper model family so the cohort engine's registry dispatch, the token
+slab, and the policy servers are exercised end to end on dense / ssm / moe
+backbones (``launch.train --arch fed-lm-smoke`` etc., golden-pinned in
+``tests/golden/fed-lm-smoke.json``). All run in float32 with lossless MoE
+capacity so the cohort engine's parity with the sequential oracle is exact
+to float tolerance.
+"""
+from repro.models.config import ModelConfig
+
+
+def _lm(name: str, family: str, **kw):
+    # Deliberately tiny: the simulator's regime is many small clients where
+    # per-dispatch overhead (not device math) bounds throughput — that is
+    # the regime the cohort engine exists for, and the one the family
+    # throughput gate (benchmarks/sim_throughput.py --family) measures.
+    defaults = dict(
+        num_layers=2, d_model=16, num_heads=2, num_kv_heads=2, d_ff=32,
+        vocab_size=32, block_pattern=("attn",), ffn_pattern=("dense",),
+        dtype="float32", param_dtype="float32", remat="none",
+        q_chunk=64, kv_chunk=64, pad_vocab_to=32,
+    )
+    defaults.update(kw)
+    return ModelConfig(name=name, family=family, **defaults)
+
+
+CONFIGS = {
+    # dense transformer — the headline federated LM scenario
+    "fed-lm-smoke": _lm("fed-lm-smoke", "dense"),
+    # state-space backbone (mamba mixer)
+    "fed-lm-ssm-smoke": _lm("fed-lm-ssm-smoke", "ssm",
+                            block_pattern=("mamba",), ssm_state_dim=8),
+    # mixture-of-experts FFN. Two knobs keep the MoE objective row-decoupled
+    # so the cohort engine's masked padding rows are exact no-ops:
+    # capacity_factor >= E/top_k (no token drops => each token's output
+    # depends only on its own routing) and router_aux_coef = 0 (the Switch
+    # load-balance term sums over ALL batch tokens, so padded rows would
+    # perturb ragged-batch gradients at well above float tolerance).
+    "fed-lm-moe-smoke": _lm("fed-lm-moe-smoke", "moe",
+                            ffn_pattern=("moe",), d_ff=0,
+                            num_experts=4, top_k=2, moe_d_ff=16,
+                            capacity_factor=2.0, router_aux_coef=0.0),
+}

@@ -4,7 +4,8 @@ from repro.data.synthetic import (
     make_lm_corpus,
     train_test_split,
 )
-from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.partition import (dirichlet_partition, document_partition,
+                                  iid_partition)
 from repro.data.calibration import make_calibration_batch
 from repro.data.loader import (ClientDataset, StackedClients, batch_iterator,
-                               epoch_batch_indices)
+                               data_kind_of, epoch_batch_indices)

@@ -15,6 +15,21 @@ from repro.data.synthetic import SyntheticClassification
 def make_calibration_batch(ds: SyntheticClassification, batch_size: int = 64,
                            source: str = "gaussian", seed: int = 123) -> dict:
     rng = np.random.RandomState(seed)
+    if np.issubdtype(ds.x.dtype, np.integer):
+        # token task (federated LM): "gaussian" becomes the content-free
+        # analogue — uniform random token ids; "real" samples held-out
+        # sequences. Labels mirror the tokens (loss_fn shifts causally).
+        if source == "real":
+            idx = rng.choice(len(ds), size=min(batch_size, len(ds)),
+                             replace=False)
+            toks = ds.x[idx].astype(np.int32)
+        elif source == "gaussian":
+            toks = rng.randint(0, ds.num_classes,
+                               size=(batch_size,) + ds.x.shape[1:]
+                               ).astype(np.int32)
+        else:
+            raise ValueError(f"unknown calibration source {source!r}")
+        return {"tokens": toks, "labels": toks.copy()}
     if source == "real":
         idx = rng.choice(len(ds), size=batch_size, replace=False)
         return {"x": ds.x[idx].astype(np.float32), "y": ds.y[idx].astype(np.int32)}

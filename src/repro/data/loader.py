@@ -6,6 +6,16 @@ padded into one ``(C, n_max, ...)`` slab with sizes and validity masks, so
 local training for a whole cohort is a single gather + vmapped scan instead
 of C python loops.
 
+Both views are layout-polymorphic over the registry's two data kinds:
+*image* shards hold ``x (n, ...) float32`` features and ``y (n,) int``
+labels and batch as ``{"x", "y"}``; *token* shards (federated LM
+fine-tuning) hold ``x = y = (n, seq) int32`` token sequences and batch as
+``{"tokens", "labels"}`` — the keys ``models.registry``'s token
+``client_loss`` (i.e. ``model_lib.loss_fn``) speaks. The kind is inferred
+from the feature dtype (integer => tokens), so the cohort slab becomes a
+``(C, n_max, seq)`` int32 token/label pair with the SAME sizes/mask/shuffle
+machinery as the image slab.
+
 Both views draw batch order from ``epoch_batch_indices`` — the one shuffle
 routine — so the vectorized engine visits exactly the batches the legacy
 per-client loop would (same ``np.random.RandomState`` stream, same
@@ -35,6 +45,13 @@ def epoch_batch_indices(n: int, num_epochs: int, batch_size: int,
     return out
 
 
+def data_kind_of(x: np.ndarray) -> str:
+    """The registry data kind a feature array implies: integer dtypes are
+    token-id sequences, everything else image/feature rows."""
+    return "tokens" if np.issubdtype(np.asarray(x).dtype, np.integer) \
+        else "image"
+
+
 @dataclass
 class ClientDataset:
     data: SyntheticClassification
@@ -42,11 +59,20 @@ class ClientDataset:
     def __len__(self):
         return len(self.data)
 
+    @property
+    def kind(self) -> str:
+        return data_kind_of(self.data.x)
+
     def epochs(self, num_epochs: int, batch_size: int, seed: int) -> Iterator[dict]:
+        tokens = self.kind == "tokens"
         for idx in epoch_batch_indices(len(self.data), num_epochs,
                                        batch_size, seed):
-            yield {"x": self.data.x[idx].astype(np.float32),
-                   "y": self.data.y[idx].astype(np.int32)}
+            if tokens:
+                yield {"tokens": self.data.x[idx].astype(np.int32),
+                       "labels": self.data.y[idx].astype(np.int32)}
+            else:
+                yield {"x": self.data.x[idx].astype(np.float32),
+                       "y": self.data.y[idx].astype(np.int32)}
 
 
 @dataclass
@@ -56,13 +82,18 @@ class StackedClients:
     ``x[c, :sizes[c]]`` are client ``c``'s real samples; rows beyond that are
     zero padding with ``mask`` False. Padding never reaches a loss term: the
     batch schedules index only real rows, and ragged batch tails are masked
-    inside the engine's loss.
+    inside the engine's loss (for token shards, by turning the padded rows'
+    labels into the ``-1`` no-target sentinel).
+
+    ``kind == "image"``: x (C, n_max, ...) float32, y (C, n_max) int32.
+    ``kind == "tokens"``: x and y both (C, n_max, seq) int32.
     """
-    x: np.ndarray        # (C, n_max, ...) float32
-    y: np.ndarray        # (C, n_max) int32
+    x: np.ndarray        # (C, n_max, ...) float32 features | int32 tokens
+    y: np.ndarray        # (C, n_max[, seq]) int32 labels
     sizes: np.ndarray    # (C,) int32 true per-client sample counts
     mask: np.ndarray     # (C, n_max) bool — True on real rows
     num_classes: int
+    kind: str = "image"
 
     def __len__(self):
         return self.x.shape[0]
@@ -75,18 +106,22 @@ class StackedClients:
     def from_datasets(cls, datasets: Sequence[ClientDataset]) -> "StackedClients":
         sizes = np.asarray([len(d) for d in datasets], np.int32)
         n_max = int(sizes.max())
-        feat = datasets[0].data.x.shape[1:]
+        d0 = datasets[0].data
+        kind = data_kind_of(d0.x)
+        feat = d0.x.shape[1:]
+        lab = d0.y.shape[1:]
         C = len(datasets)
-        x = np.zeros((C, n_max) + feat, np.float32)
-        y = np.zeros((C, n_max), np.int32)
+        x = np.zeros((C, n_max) + feat,
+                     np.int32 if kind == "tokens" else np.float32)
+        y = np.zeros((C, n_max) + lab, np.int32)
         mask = np.zeros((C, n_max), bool)
         for c, d in enumerate(datasets):
             n = sizes[c]
-            x[c, :n] = d.data.x.astype(np.float32)
+            x[c, :n] = d.data.x.astype(x.dtype)
             y[c, :n] = d.data.y.astype(np.int32)
             mask[c, :n] = True
         return cls(x=x, y=y, sizes=sizes, mask=mask,
-                   num_classes=datasets[0].data.num_classes)
+                   num_classes=d0.num_classes, kind=kind)
 
 
 def batch_iterator(ds: SyntheticClassification, batch_size: int,

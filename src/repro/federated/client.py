@@ -15,14 +15,24 @@ import jax.numpy as jnp
 from repro.common import tree as tu
 from repro.data.loader import ClientDataset
 from repro.models import model as model_lib
+from repro.models import registry
 from repro.models.config import ModelConfig
 
 _STEP_CACHE = {}
 
 
-def _loss_for(cfg: ModelConfig, prox: float, align: float):
+def _client_loss_fn(cfg: ModelConfig):
+    """The registry's client_loss is the one per-family training-loss entry
+    point both engines share (for cnn/mlp it is arithmetically identical to
+    the legacy model_lib.loss_fn dispatch); unregistered families keep the
+    generic loss_fn so the sequential fallback stays able to train them."""
+    return (registry.get_family(cfg).client_loss
+            if registry.is_registered(cfg.family) else model_lib.loss_fn)
+
+
+def _loss_for(cfg: ModelConfig, prox: float, align: float, base_fn):
     def loss(params, batch, anchor):
-        base = model_lib.loss_fn(params, batch, cfg, _RULES)
+        base = base_fn(params, batch, cfg, _RULES)
         if prox > 0.0:  # FedProx-style proximal pull toward the anchor
             base = base + 0.5 * prox * tu.tree_sq_norm(tu.tree_sub(params, anchor))
         if align > 0.0:  # FedPAC-lite: align the classifier head with global
@@ -43,9 +53,13 @@ from repro.common.sharding import SINGLE_DEVICE_RULES as _RULES
 
 
 def _get_step(cfg: ModelConfig, prox: float, align: float):
-    key = (cfg, prox, align)
+    # the resolved loss entry is part of the key so register_family(...,
+    # override=True) invalidates the compiled step instead of silently
+    # reusing the replaced entry's program
+    base_fn = _client_loss_fn(cfg)
+    key = (cfg, prox, align, base_fn)
     if key not in _STEP_CACHE:
-        loss = _loss_for(cfg, prox, align)
+        loss = _loss_for(cfg, prox, align, base_fn)
 
         @jax.jit
         def step(params, batch, anchor, lr):

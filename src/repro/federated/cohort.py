@@ -10,11 +10,19 @@ flat ``(d,)`` parameter layout from ``common.tree.FlatSpec`` (no pytree
 unflatten on the host — ``spec.unflatten`` happens inside the traced loss).
 
 Data lives on device once, as a padded ``(C, n_max, ...)`` slab
-(``data.loader.StackedClients``); batch schedules come from the same
-``epoch_batch_indices`` stream the legacy iterator uses, so the engine
-reproduces the per-client loop's arithmetic to float tolerance — ragged
-client sizes are handled by masking batch tails inside the loss, and padded
-scan steps / padded cohort rows are exact no-ops.
+(``data.loader.StackedClients`` — float features for image families,
+``(C, n_max, seq)`` int32 token/label arrays for LM families); batch
+schedules come from the same ``epoch_batch_indices`` stream the legacy
+iterator uses, so the engine reproduces the per-client loop's arithmetic to
+float tolerance — ragged client sizes are handled by masking batch tails
+inside the loss, and padded scan steps / padded cohort rows are exact no-ops.
+
+The member loss is model-agnostic: it comes from the family registry
+(``models.registry.get_family(cfg).client_loss`` with the mask folded in by
+``masked_batch``), so ANY registered family — the paper's cnn/mlp, the
+dense/ssm/moe/hybrid LM families via ``model_lib.loss_fn`` (remat honored
+per ``ModelConfig``), or a user-registered one — compiles into the same
+vmap x scan program.
 
 FedProx (``prox``) and FedPAC (``align``) fold in as static config: the
 proximal/alignment pulls are plain vector arithmetic on the flat layout
@@ -31,22 +39,44 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.common import sharding
 from repro.common import tree as tu
+from repro.common.sharding import SINGLE_DEVICE_RULES
 from repro.data.loader import StackedClients, epoch_batch_indices
 from repro.federated.client import _head
-from repro.models import model as model_lib
+from repro.models import registry
 from repro.models.config import ModelConfig
 
 
 _RUN_CACHE = {}
 
 
+def bucket_size(B: int, data_kind: str = "tokens") -> int:
+    """Pad a wave of B members up to the family's bucket grid. Padded rows
+    are masked no-ops but still execute their local steps, so the grid
+    trades padded compute against compiled-program count:
+
+    ``image`` — multiples of 4 (max_cohort/4 programs, <= 3 wasted rows):
+    the cnn/mlp programs compile in milliseconds, so a dense grid is free.
+
+    ``tokens`` — {4, 6, 8, 12, 16, 24, 32, ...} (powers of two and 1.5x
+    powers of two; worst-case 1.5x padded compute, O(log max_cohort)
+    programs): transformer-family programs compile in *seconds* each, so a
+    dense grid would stall mid-run on every fresh wave size."""
+    if data_kind == "image":
+        return -(-B // 4) * 4
+    if B <= 4:
+        return 4
+    p = 1 << (B - 1).bit_length()          # next power of two >= B
+    return 3 * p // 4 if 3 * p // 4 >= B else p
+
+
 class CohortEngine:
     """One compiled local-training step for a whole cohort.
 
     Built once per (model, stacked data, epochs, batch_size, prox, align);
-    ``cohort_update`` then costs one device call per cohort. Cohort sizes are
-    bucketed to powers of two and scan length is fixed at the global maximum,
-    so the jit cache holds O(log C) programs, not one per cohort shape.
+    ``cohort_update`` then costs one device call per cohort. Cohort sizes
+    are bucketed to the ``bucket_size`` grid and scan length is fixed at
+    the global maximum, so the jit cache holds O(log C) programs, not one
+    per cohort shape.
     """
 
     def __init__(self, cfg: ModelConfig, stacked: StackedClients,
@@ -54,8 +84,10 @@ class CohortEngine:
                  local_epochs: int = 5, batch_size: int = 64,
                  prox: float = 0.0, align: float = 0.0,
                  mesh=None, rules: Optional[sharding.LogicalRules] = None):
-        assert cfg.family in ("cnn", "mlp"), \
-            f"cohort engine trains the paper's cnn/mlp families, not {cfg.family}"
+        # any registered family compiles; get_family raises (naming the
+        # registered set) for families the registry does not know
+        fam = registry.get_family(cfg)
+        self._data_kind = fam.data_kind
         self.cfg = cfg
         self.spec = spec
         self.local_epochs = int(local_epochs)
@@ -89,19 +121,18 @@ class CohortEngine:
         # Compiled step shared across engine instances (a fresh engine per
         # run would otherwise retrace; mirrors client._STEP_CACHE). The key
         # pins everything _build closes over: the model (which fixes the
-        # flat layout) and the static loss variant.
-        key = (cfg, spec, self.prox, self.align)
+        # flat layout), the static loss variant, and the registry entry —
+        # so register_family(..., override=True) invalidates the program.
+        key = (cfg, spec, self.prox, self.align, fam)
         if key not in _RUN_CACHE:
-            _RUN_CACHE[key] = self._build(cfg, spec, self.prox, self.align)
+            _RUN_CACHE[key] = self._build(cfg, spec, self.prox, self.align,
+                                          fam)
         self._run = _RUN_CACHE[key]
 
     # -- compiled core ------------------------------------------------------
 
     @staticmethod
-    def _build(cfg, spec, prox, align):
-        forward = (model_lib.cnn_forward if cfg.family == "cnn"
-                   else model_lib.mlp_forward)
-
+    def _build(cfg, spec, prox, align, fam):
         def member(x_all, y_all, p0_flat, cid, idx, valid, counts, lr_steps):
             xs = x_all[cid]          # (n_max, ...) this member's data
             ys = y_all[cid]
@@ -112,10 +143,8 @@ class CohortEngine:
             anchor = spec.unflatten(p0_flat)
 
             def loss(p, xb, yb, vm, cnt):
-                logits = forward(p, xb, cfg).astype(jnp.float32)
-                lse = jax.nn.logsumexp(logits, axis=-1)
-                gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
-                base = jnp.sum((lse - gold) * vm) / cnt
+                base = fam.client_loss(p, fam.masked_batch(xb, yb, vm, cnt),
+                                       cfg, SINGLE_DEVICE_RULES)
                 if prox > 0.0:
                     base = base + 0.5 * prox * tu.tree_sq_norm(
                         tu.tree_sub(p, anchor))
@@ -188,10 +217,7 @@ class CohortEngine:
         # 0 on padded steps (making them exact no-ops)
         lr_steps = (np.asarray(lrs, np.float64)[:, None]
                     * (nvalid > 0.0)).astype(np.float32)
-        # bucket to multiples of 4: bounds the jit cache at max_cohort/4
-        # programs while wasting at most 3 padded members' compute (padded
-        # rows are masked no-ops but still execute their local steps)
-        Bp = -(-B // 4) * 4
+        Bp = bucket_size(B, self._data_kind)
         if Bp > B:
             pad = Bp - B
 

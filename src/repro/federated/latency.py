@@ -1,8 +1,9 @@
 """Client response-time and availability models (paper §6.2 heterogeneity).
 
-Latency: Uniform(lo, hi) and a long-tail distribution over the same support
-(most clients near ``lo``, a heavy tail toward ``hi`` — the paper notes
-long-tail response times cluster around the minimum).
+Latency: Uniform(lo, hi) plus two heavy-tailed distributions over the same
+support — ``longtail`` (Pareto-shaped) and ``lognormal`` (log-space normal)
+— with most clients near ``lo`` and a straggler tail toward ``hi`` (the
+paper notes long-tail response times cluster around the minimum).
 
 Availability: FLGo-style intermittent clients — each dispatch succeeds with
 a per-client probability; a failed dispatch still occupies its concurrency
@@ -25,6 +26,17 @@ def make_latency_sampler(kind: str, lo: float, hi: float, seed: int = 0):
         def sample():
             x = (np.power(1.0 - rng.rand(), -1.0 / 1.5) - 1.0)  # pareto(1.5)
             return float(np.clip(lo * (1.0 + x), lo, hi))
+    elif kind == "lognormal":
+        # Heavy-tail in log space: median at the lower quartile of the
+        # log-range, sigma a quarter of the log-range — most clients sit
+        # near ``lo`` with a long straggler tail toward ``hi`` (clipped to
+        # the support, like the other kinds).
+        span = np.log(hi / lo)
+        mu = np.log(lo) + 0.25 * span
+        sigma = 0.25 * span
+
+        def sample():
+            return float(np.clip(np.exp(rng.normal(mu, sigma)), lo, hi))
     else:
         raise ValueError(f"unknown latency kind {kind!r}")
     return sample

@@ -32,6 +32,7 @@ slot for the full response time, then re-dispatches without a receive.
 from __future__ import annotations
 
 import heapq
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, NamedTuple, Optional
 
@@ -47,22 +48,36 @@ from repro.federated import servers as servers_lib
 from repro.federated.cohort import CohortEngine
 from repro.federated.latency import per_client_availability, per_client_latency
 from repro.models import model as model_lib
+from repro.models import registry
 from repro.models.config import ModelConfig
 
 ENGINES = ("cohort", "sequential")
+
+_FALLBACK_WARNED = set()
 
 
 def _resolve_engine(sim: "SimConfig", cfg: ModelConfig) -> str:
     """Validate ``sim.engine`` and pick the engine that can train ``cfg``.
 
-    The cohort engine compiles the paper's cnn/mlp forward passes; other
-    model families fall back to the sequential per-client loop (which runs
-    through the generic ``client.local_update``) rather than crashing on
-    the default ``engine="cohort"``.
+    The cohort engine compiles any family in the model-family registry
+    (``models.registry``); unregistered families fall back to the sequential
+    per-client loop (the generic ``client.local_update``) rather than
+    crashing on the default ``engine="cohort"`` — with a one-time warning,
+    because silently comparing a cohort run against a sequential fallback
+    would corrupt benchmarks. The engine actually used is recorded on
+    ``SimResult.engine``.
     """
     if sim.engine not in ENGINES:
         raise ValueError(f"unknown engine {sim.engine!r}; known: {ENGINES}")
-    if sim.engine == "cohort" and cfg.family not in ("cnn", "mlp"):
+    if sim.engine == "cohort" and not registry.is_registered(cfg.family):
+        if cfg.family not in _FALLBACK_WARNED:
+            _FALLBACK_WARNED.add(cfg.family)
+            warnings.warn(
+                f"model family {cfg.family!r} is not in the model-family "
+                f"registry (registered: {registry.registered_families()}); "
+                f"engine='cohort' falls back to the sequential loop for it. "
+                f"Register the family (models/registry.py) to compile it.",
+                RuntimeWarning, stacklevel=3)
         return "sequential"
     return sim.engine
 
@@ -109,6 +124,8 @@ class SimResult:
     launched: int = 0                 # total dispatch calls (incl. in flight)
     dropped: int = 0                  # dispatches lost to client unavailability
     cohorts: int = 0                  # device batches the cohort engine ran
+    engine: str = ""                  # engine actually used ("cohort" may
+                                      # have resolved to "sequential")
     server_log: List[dict] = field(default_factory=list)
     receive_log: List[dict] = field(default_factory=list)
     digests: List[List[float]] = field(default_factory=list)
@@ -148,25 +165,43 @@ def _memo_identity(cache: Dict[tuple, tuple], key: tuple, anchor, build):
 
 
 def _make_eval(cfg: ModelConfig, test_ds, sim: SimConfig):
+    # the registry entry (None for unregistered families) is part of the
+    # key so register_family(..., override=True) invalidates the closure
+    fam = (registry.get_family(cfg)
+           if registry.is_registered(cfg.family) else None)
     return _memo_identity(
-        _EVAL_CACHE, (cfg, sim.eval_batches, sim.eval_batch_size),
+        _EVAL_CACHE, (cfg, sim.eval_batches, sim.eval_batch_size, fam),
         test_ds, lambda: _build_eval(cfg, test_ds, sim))
 
 
 def _build_eval(cfg: ModelConfig, test_ds, sim: SimConfig):
+    from repro.common.sharding import SINGLE_DEVICE_RULES as R
+
     rng = np.random.RandomState(1234)
     n = len(test_ds)
     bs = min(sim.eval_batch_size, n)
     idxs = [rng.choice(n, size=bs, replace=False) for _ in range(sim.eval_batches)]
-    batches = [{"x": jnp.asarray(test_ds.x[ix]), "y": jnp.asarray(test_ds.y[ix])}
-               for ix in idxs]
+    if registry.is_registered(cfg.family):
+        fam = registry.get_family(cfg)
+        batches = [fam.batch_fn(test_ds.x[ix], test_ds.y[ix]) for ix in idxs]
 
-    @jax.jit
-    def acc1(params, x, y):
-        return jnp.mean((model_lib.predict(params, x, cfg) == y).astype(jnp.float32))
+        @jax.jit
+        def acc1(params, batch):
+            return fam.eval_accuracy(params, batch, cfg, R)
+    else:
+        # unregistered family on the sequential fallback: the legacy argmax
+        # eval (model_lib.predict raises a clear error for families it
+        # cannot score — register the family to plug in a metric)
+        batches = [{"x": jnp.asarray(test_ds.x[ix]),
+                    "y": jnp.asarray(test_ds.y[ix])} for ix in idxs]
+
+        @jax.jit
+        def acc1(params, batch):
+            return jnp.mean((model_lib.predict(params, batch["x"], cfg)
+                             == batch["y"]).astype(jnp.float32))
 
     def evaluate(params) -> float:
-        return float(np.mean([float(acc1(params, b["x"], b["y"])) for b in batches]))
+        return float(np.mean([float(acc1(params, b)) for b in batches]))
 
     return evaluate
 
@@ -211,10 +246,13 @@ def _build_sketch_fn_flat(cfg: ModelConfig, calib_batch: dict,
     batched = jax.jit(jax.vmap(
         lambda vec: psa_lib.client_sketch(loss, spec.unflatten(vec), calib,
                                           psa_cfg)))
+    from repro.federated.cohort import bucket_size
+    data_kind = registry.get_family(cfg).data_kind
 
     def fn(w_stack: jnp.ndarray) -> jnp.ndarray:
         B = int(w_stack.shape[0])
-        Bp = -(-B // 4) * 4     # multiple-of-4 buckets, like the engine
+        # same family-dependent bucket grid as the engine
+        Bp = bucket_size(B, data_kind)
         if Bp > B:
             w_stack = jnp.concatenate(
                 [w_stack, jnp.zeros((Bp - B, w_stack.shape[1]), w_stack.dtype)])
@@ -302,7 +340,8 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
               server_kwargs: Optional[dict] = None,
               receive_hook: Optional[Callable] = None) -> SimResult:
     """Run one asynchronous algorithm to the virtual-time horizon."""
-    batched = _resolve_engine(sim, cfg) == "cohort"
+    engine = _resolve_engine(sim, cfg)
+    batched = engine == "cohort"
     rng = np.random.RandomState(sim.seed)
     latency, lat_means = per_client_latency(
         sim.latency_kind, sim.latency_lo, sim.latency_hi, sim.num_clients,
@@ -325,7 +364,7 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
                  if sim.record_trajectory else None)
 
     evaluate = _make_eval(cfg, test_ds, sim)
-    result = SimResult()
+    result = SimResult(engine=engine)
     concurrency = max(1, int(round(sim.concurrency * sim.num_clients)))
     heap: List[_Event] = []
     seq = 0
@@ -554,9 +593,10 @@ def run_fedavg(cfg: ModelConfig, init_params, client_datasets: List[ClientDatase
                                     latency_means=lat_means)
     use_avail = sim.availability_kind != "always" and sim.dropout_rate > 0.0
     evaluate = _make_eval(cfg, test_ds, sim)
-    result = SimResult()
+    engine = _resolve_engine(sim, cfg)
+    batched = engine == "cohort"
+    result = SimResult(engine=engine)
     m = max(1, int(round(sim.concurrency * sim.num_clients)))
-    batched = _resolve_engine(sim, cfg) == "cohort"
     if batched:
         spec = tu.FlatSpec(init_params)
         stacked = StackedClients.from_datasets(client_datasets)

@@ -6,9 +6,12 @@
 
 Runs one (algorithm x Dirichlet-alpha x latency setting) cell of the paper's
 tables on the synthetic stand-in datasets and writes the learning curve +
-summary JSON. ``--arch`` accepts any registry id; transformer archs train
-their reduced smoke variant on the synthetic LM task (the full configs are
-exercised by the dry-run, not by CPU training).
+summary JSON. ``--arch`` accepts any architecture id whose family is in the
+model-family registry: cnn/mlp train the paper's classification worlds,
+token families (dense/ssm/moe/hybrid — e.g. ``--arch fed-lm-smoke``, or any
+assigned arch's ``-smoke`` reduction) train the federated LM fine-tuning
+scenario on a document-partitioned synthetic corpus. The full-scale configs
+are exercised by the dry-run, not by CPU training.
 """
 from __future__ import annotations
 
@@ -22,15 +25,45 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import PSAConfig
-from repro.data import (ClientDataset, dirichlet_partition, iid_partition,
+from repro.data import (ClientDataset, dirichlet_partition,
+                        document_partition, iid_partition,
                         make_calibration_batch, make_classification,
-                        train_test_split)
+                        make_lm_corpus, train_test_split)
+from repro.data.synthetic import SyntheticClassification
 from repro.federated import SimConfig, run_algorithm, ALGORITHMS
 from repro.models import model as model_lib
+from repro.models import registry
+
+
+def build_lm_task(cfg, num_samples: int, alpha: float, num_clients: int,
+                  seed: int, calib_source: str = "gaussian",
+                  seq_len: int = 32):
+    """The federated LM fine-tuning world: a synthetic bigram corpus,
+    document-partitioned across clients (Dirichlet-skewed shard sizes when
+    ``alpha > 0``), chopped into ``(n_i, seq_len)`` token sequences; the
+    held-out HEAD of the corpus (its first ``n_test`` sequences) is the
+    next-token-accuracy test set and the remainder is partitioned for
+    training. ``num_samples`` counts sequences across train + test."""
+    n_test = max(2, num_samples // 10)
+    doc_len = 4 * seq_len
+    corpus = make_lm_corpus((num_samples - n_test) * seq_len + doc_len
+                            + n_test * seq_len,
+                            vocab=cfg.vocab_size, seed=seed)
+    test_toks = corpus[:n_test * seq_len].reshape(n_test, seq_len)
+    test = SyntheticClassification(x=test_toks, y=test_toks,
+                                   num_classes=cfg.vocab_size)
+    parts = document_partition(corpus[n_test * seq_len:], num_clients,
+                               seq_len, doc_len=doc_len, alpha=alpha,
+                               seed=seed)
+    clients = [ClientDataset(SyntheticClassification(x=p, y=p,
+                                                     num_classes=cfg.vocab_size))
+               for p in parts]
+    calib = make_calibration_batch(test, 8, calib_source)
+    return cfg, clients, test, calib
 
 
 def build_task(model_name: str, num_samples: int, alpha: float, num_clients: int,
-               seed: int, calib_source: str = "gaussian"):
+               seed: int, calib_source: str = "gaussian", seq_len: int = 32):
     cfg = get_config(model_name)
     if cfg.family == "cnn":
         hw = cfg.input_hw
@@ -39,10 +72,15 @@ def build_task(model_name: str, num_samples: int, alpha: float, num_clients: int
     elif cfg.family == "mlp":
         full = make_classification(num_samples, cfg.num_classes,
                                    dim=cfg.input_hw[0], seed=seed, class_sep=0.7)
+    elif (registry.is_registered(cfg.family)
+          and registry.get_family(cfg).data_kind == "tokens"):
+        return build_lm_task(cfg, num_samples, alpha, num_clients, seed,
+                             calib_source, seq_len)
     else:
         raise ValueError(
-            f"{model_name}: federated CPU training runs the paper's cnn/mlp "
-            f"models; transformer archs are exercised via the dry-run")
+            f"{model_name}: family {cfg.family!r} has no federated data "
+            f"path (registered families train via the registry; audio/vlm "
+            f"archs are exercised via the dry-run)")
     train, test = train_test_split(full, 0.1)
     if alpha <= 0:
         parts = iid_partition(train, num_clients, seed)
@@ -56,14 +94,24 @@ def build_task(model_name: str, num_samples: int, alpha: float, num_clients: int
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--alg", default="fedpsa", choices=ALGORITHMS)
-    ap.add_argument("--model", default="paper-synthetic-mlp")
+    ap.add_argument("--arch", "--model", dest="model",
+                    default="paper-synthetic-mlp",
+                    help="architecture registry id; any family in the "
+                         "model-family registry trains (token families get "
+                         "the federated LM scenario, e.g. fed-lm-smoke)")
     ap.add_argument("--alpha", type=float, default=0.1,
                     help="Dirichlet alpha; <=0 for IID")
     ap.add_argument("--clients", type=int, default=50)
     ap.add_argument("--concurrency", type=float, default=0.2)
     ap.add_argument("--horizon", type=float, default=86_400)
-    ap.add_argument("--samples", type=int, default=10_000)
-    ap.add_argument("--latency", default="uniform", choices=["uniform", "longtail"])
+    ap.add_argument("--samples", type=int, default=10_000,
+                    help="total samples (image) or sequences (token tasks)")
+    ap.add_argument("--seq", type=int, default=32,
+                    help="sequence length for token (LM) tasks")
+    ap.add_argument("--engine", default="cohort",
+                    choices=["cohort", "sequential"])
+    ap.add_argument("--latency", default="uniform",
+                    choices=["uniform", "longtail", "lognormal"])
     ap.add_argument("--lat-lo", type=float, default=10)
     ap.add_argument("--lat-hi", type=float, default=500)
     ap.add_argument("--seed", type=int, default=0)
@@ -85,12 +133,13 @@ def main():
         from repro.launch.mesh import make_fed_mesh
         mesh = make_fed_mesh(args.mesh)
     cfg, clients, test, calib = build_task(
-        args.model, args.samples, args.alpha, args.clients, args.seed, args.calib)
+        args.model, args.samples, args.alpha, args.clients, args.seed,
+        args.calib, seq_len=args.seq)
     params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
     sim = SimConfig(num_clients=args.clients, concurrency=args.concurrency,
                     horizon=args.horizon, latency_kind=args.latency,
                     latency_lo=args.lat_lo, latency_hi=args.lat_hi,
-                    seed=args.seed, mesh=mesh)
+                    seed=args.seed, engine=args.engine, mesh=mesh)
     psa = PSAConfig(buffer_size=args.buffer, queue_len=args.queue,
                     gamma=args.gamma, delta=args.delta, sketch_k=args.sketch_k)
     t0 = time.time()
@@ -108,6 +157,7 @@ def main():
         "versions": res.versions, "dispatches": res.dispatches,
         "times": res.times, "accuracies": res.accuracies,
         "wall_s": round(wall, 1), "mesh_devices": args.mesh or None,
+        "engine": res.engine,
     }
     path = os.path.join(args.out, name + ".json")
     with open(path, "w") as f:

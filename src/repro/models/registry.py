@@ -1,0 +1,167 @@
+"""Model-family registry: the one seam between models/ and the client runtime.
+
+The federated client stack (``federated/client.local_update``, the compiled
+``federated/cohort.CohortEngine``, the simulator's evaluation loop) used to
+hard-code the paper's cnn/mlp forwards — every other family in ``models/``
+silently dropped to the sequential python loop. This module replaces those
+branches with a registry: a family registers ONE ``ModelFamily`` entry and
+every engine (sequential, cohort, sharded-cohort) trains and evaluates it
+through the same four callables. ``federated/simulator._resolve_engine``
+consults :func:`is_registered` instead of a family allow-list.
+
+The contract (all callables are pure and traced under jit/vmap):
+
+``client_loss(params, batch, cfg, rules) -> scalar``
+    The local-SGD training loss. ``batch`` follows the family's
+    ``data_kind`` convention — ``"image"``: ``{"x","y"}`` plus optional
+    ``{"sample_weight","weight_total"}`` row masking; ``"tokens"``:
+    ``{"tokens","labels"}`` with ``labels < 0`` masked (the convention
+    ``model_lib.loss_fn`` already speaks). Remat, MoE aux losses, etc. are
+    the entry's own business — the token entry simply delegates to
+    ``model_lib.loss_fn``, which honors ``cfg.remat`` per ``ModelConfig``.
+
+``masked_batch(xb, yb, vm, cnt) -> batch``
+    Fold the cohort engine's per-row validity mask ``vm`` (f32, (bs,)) and
+    clamped count ``cnt`` into a batch such that masked rows are EXACT
+    no-ops in ``client_loss``. With ``vm == 1`` everywhere the result must
+    be arithmetically identical to the unmasked batch — that is what makes
+    the cohort engine's parity with ``client.local_update`` exact.
+
+``batch_fn(x, y) -> batch``
+    Host-side: raw dataset arrays -> a device batch for ``client_loss`` /
+    ``eval_accuracy`` (the evaluation loop and golden worlds use it).
+
+``eval_accuracy(params, batch, cfg, rules) -> scalar``
+    Test metric in [0, 1] — classification accuracy for image families,
+    masked next-token accuracy for token families.
+
+Registering a new family is ~10 lines; see ARCHITECTURE.md.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+class ModelFamily(NamedTuple):
+    name: str                 # registry key == ModelConfig.family
+    data_kind: str            # "image" | "tokens" (selects the slab layout)
+    client_loss: Callable     # (params, batch, cfg, rules) -> scalar
+    masked_batch: Callable    # (xb, yb, vm, cnt) -> batch dict
+    batch_fn: Callable        # (x, y) -> batch dict (host side)
+    eval_accuracy: Callable   # (params, batch, cfg, rules) -> scalar
+
+
+_REGISTRY: Dict[str, ModelFamily] = {}
+
+
+def register_family(entry: ModelFamily, *, override: bool = False) -> None:
+    """Register ``entry`` under ``entry.name``; the cohort engine and the
+    simulator pick it up immediately (``engine="cohort"`` stops falling back
+    to the sequential loop for that family)."""
+    if entry.name in _REGISTRY and not override:
+        raise ValueError(f"family {entry.name!r} already registered "
+                         f"(pass override=True to replace)")
+    assert entry.data_kind in ("image", "tokens"), entry.data_kind
+    _REGISTRY[entry.name] = entry
+
+
+def is_registered(family: str) -> bool:
+    return family in _REGISTRY
+
+
+def registered_families() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_family(family) -> ModelFamily:
+    """Resolve a family name (or a ModelConfig) to its registry entry."""
+    if isinstance(family, ModelConfig):
+        family = family.family
+    entry = _REGISTRY.get(family)
+    if entry is None:
+        raise KeyError(
+            f"model family {family!r} is not in the model-family registry; "
+            f"registered: {registered_families()} "
+            f"(see models/registry.py for the ~10-line contract)")
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Built-in image families (the paper's cnn/mlp models)
+# ---------------------------------------------------------------------------
+
+def _image_entry(name: str, forward: Callable, mean_loss: Callable
+                 ) -> ModelFamily:
+    def client_loss(params, batch, cfg, rules):
+        vm = batch.get("sample_weight")
+        if vm is None:
+            # unmasked path: bit-identical to the legacy per-batch loss
+            return mean_loss(params, batch, cfg)
+        logits = forward(params, batch["x"], cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+        return jnp.sum((lse - gold) * vm) / batch["weight_total"]
+
+    def masked_batch(xb, yb, vm, cnt):
+        return {"x": xb, "y": yb, "sample_weight": vm, "weight_total": cnt}
+
+    def batch_fn(x, y):
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+    def eval_accuracy(params, batch, cfg, rules):
+        pred = jnp.argmax(forward(params, batch["x"], cfg), axis=-1)
+        return jnp.mean((pred == batch["y"]).astype(jnp.float32))
+
+    return ModelFamily(name=name, data_kind="image", client_loss=client_loss,
+                       masked_batch=masked_batch, batch_fn=batch_fn,
+                       eval_accuracy=eval_accuracy)
+
+
+# ---------------------------------------------------------------------------
+# Built-in token families: every LM-shaped family shares model_lib.loss_fn
+# ---------------------------------------------------------------------------
+
+def _token_entry(name: str) -> ModelFamily:
+    def client_loss(params, batch, cfg, rules):
+        return model_lib.loss_fn(params, batch, cfg, rules)
+
+    def masked_batch(xb, yb, vm, cnt):
+        # a masked row's labels all become -1, which model_lib's loss mask
+        # already treats as "no target" — the row contributes zero loss and
+        # zero gradient, so padded scan steps stay exact no-ops
+        labels = jnp.where(vm[:, None] > 0.0, yb, -1)
+        return {"tokens": xb, "labels": labels}
+
+    def batch_fn(x, y):
+        return {"tokens": jnp.asarray(x, jnp.int32),
+                "labels": jnp.asarray(y, jnp.int32)}
+
+    def eval_accuracy(params, batch, cfg, rules):
+        logits = model_lib.forward_logits(params, batch, cfg, rules)
+        labels = batch["labels"]
+        if cfg.causal:   # position t predicts token t+1, as in the loss
+            logits = logits[:, :-1]
+            labels = labels[:, 1:]
+        mask = (labels >= 0).astype(jnp.float32)
+        hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        return jnp.sum(hit * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    return ModelFamily(name=name, data_kind="tokens", client_loss=client_loss,
+                       masked_batch=masked_batch, batch_fn=batch_fn,
+                       eval_accuracy=eval_accuracy)
+
+
+register_family(_image_entry("cnn", model_lib.cnn_forward, model_lib.cnn_loss))
+register_family(_image_entry("mlp", model_lib.mlp_forward, model_lib.mlp_loss))
+# All text-token families run through the one loss_fn entry point. The
+# audio/vlm families are NOT registered: their batches need precomputed
+# frame/patch embeddings the federated data layer does not produce, so the
+# simulator falls back to the sequential loop (with a warning) for them.
+for _fam in ("dense", "moe", "ssm", "hybrid"):
+    register_family(_token_entry(_fam))

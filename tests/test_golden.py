@@ -149,6 +149,55 @@ def test_golden_digests_are_committed():
 
 
 # ---------------------------------------------------------------------------
+# Federated LM scenario golden (fed-lm-smoke, slow / LM tier)
+# ---------------------------------------------------------------------------
+
+# The token-slab world: a dense-transformer smoke fine-tuned across
+# document-partitioned bigram corpus shards. Changing ANY of these constants
+# (or the fed-lm-smoke config) invalidates tests/golden/fed-lm-smoke.json.
+FED_LM_WORLD = dict(model="fed-lm-smoke", samples=240, clients=6, alpha=0.3,
+                    seed=0, seq=16)
+FED_LM_SIM = dict(num_clients=6, horizon=6_000.0, eval_every=3_000.0, seed=0,
+                  local_epochs=2, batch_size=8)
+FED_LM_POLICIES = ("fedasync", "fedpsa")
+
+
+def _build_lm_world():
+    from repro.launch.train import build_task
+    cfg, clients, test, calib = build_task(
+        FED_LM_WORLD["model"], FED_LM_WORLD["samples"], FED_LM_WORLD["alpha"],
+        FED_LM_WORLD["clients"], FED_LM_WORLD["seed"],
+        seq_len=FED_LM_WORLD["seq"])
+    params = M.init_params(jax.random.PRNGKey(FED_LM_WORLD["seed"]), cfg)
+    return cfg, clients, test, calib, params
+
+
+@pytest.fixture(scope="module")
+def lm_world():
+    return _build_lm_world()
+
+
+def _run_lm(world, name, engine):
+    cfg, clients, test, calib, params = world
+    kw = {}
+    if name == "fedpsa":
+        kw = dict(psa_cfg=PSAConfig(**PSA), calib_batch=calib)
+    sim = SimConfig(engine=engine, record_trajectory=True, **FED_LM_SIM)
+    return run_algorithm(name, cfg, params, clients, test, sim, **kw)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", ("sequential", "cohort"))
+@pytest.mark.parametrize("name", FED_LM_POLICIES)
+def test_fed_lm_matches_golden(lm_world, name, engine):
+    """Both engines reproduce the checked-in LM-scenario digest streams
+    (and the cohort run must actually BE a cohort run, not a fallback)."""
+    result = _run_lm(lm_world, name, engine)
+    assert result.engine == engine
+    _check(result, _load("fed-lm-smoke")["policies"][name])
+
+
+# ---------------------------------------------------------------------------
 # Regeneration entry point (make golden-regen)
 # ---------------------------------------------------------------------------
 
@@ -180,6 +229,25 @@ def regen():
             f.write("\n")
         print(f"wrote {path}  ({len(r.digests)} digests, "
               f"acc={final['final_accuracy']:.4f})")
+    lm_world = _build_lm_world()
+    policies = {}
+    for name in FED_LM_POLICIES:
+        r = _run_lm(lm_world, name, "sequential")
+        final = _final(r)
+        final["final_accuracy"] = _round(final["final_accuracy"])
+        final["aulc"] = _round(r.aulc)
+        policies[name] = {
+            "digests": [[_round(a), _round(b)] for a, b in r.digests],
+            "final": final,
+        }
+    payload = {"world": FED_LM_WORLD, "sim": FED_LM_SIM, "psa": PSA,
+               "policies": policies}
+    path = _golden_path("fed-lm-smoke")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}  ({[len(p['digests']) for p in policies.values()]} "
+          f"digests)")
 
 
 def check() -> int:
@@ -199,6 +267,17 @@ def check() -> int:
             print(f"STALE {name}: {str(e).splitlines()[0]}", file=sys.stderr)
         else:
             print(f"ok {name}")
+    lm_world = _build_lm_world()
+    for name in FED_LM_POLICIES:
+        try:
+            _check(_run_lm(lm_world, name, "sequential"),
+                   _load("fed-lm-smoke")["policies"][name])
+        except AssertionError as e:
+            stale.append(f"fed-lm-smoke/{name}")
+            print(f"STALE fed-lm-smoke/{name}: {str(e).splitlines()[0]}",
+                  file=sys.stderr)
+        else:
+            print(f"ok fed-lm-smoke/{name}")
     if stale:
         print(f"golden digests stale for {stale} — run `make golden-regen` "
               f"and commit tests/golden/", file=sys.stderr)

@@ -20,8 +20,55 @@ from repro.data import (ClientDataset, dirichlet_partition,
 from repro.federated import SimConfig, run_algorithm
 from repro.federated import simulator as sim_mod
 from repro.federated.latency import (AVAILABILITY_KINDS,
+                                     make_latency_sampler,
                                      per_client_availability,
                                      per_client_latency)
+
+# ---------------------------------------------------------------------------
+# Unit: latency distributions
+# ---------------------------------------------------------------------------
+
+
+def test_lognormal_latency_heavy_tail():
+    """The lognormal kind: bounded support, deterministic by seed, and a
+    genuinely heavy tail (mean > median, mass concentrated near lo)."""
+    lo, hi = 10.0, 500.0
+    sample = make_latency_sampler("lognormal", lo, hi, seed=0)
+    draws = np.array([sample() for _ in range(4000)])
+    assert np.all((lo <= draws) & (draws <= hi))
+    assert np.mean(draws) > np.median(draws) * 1.1        # right-skew
+    assert np.median(draws) < lo + 0.25 * (hi - lo)       # mass near lo
+    assert np.max(draws) > 0.5 * hi                       # tail reaches out
+    replay = make_latency_sampler("lognormal", lo, hi, seed=0)
+    np.testing.assert_array_equal(draws[:50],
+                                  [replay() for _ in range(50)])
+
+
+def test_lognormal_per_client_latency_plumbs():
+    sampler, means = per_client_latency("lognormal", 10.0, 500.0, 200, seed=1)
+    assert means.shape == (200,)
+    assert np.all((10.0 <= means) & (means <= 500.0))
+    assert np.mean(means) > np.median(means)              # skew survives
+    draws = np.array([sampler(i) for i in range(200)])
+    assert np.all((10.0 <= draws) & (draws <= 500.0))
+    with pytest.raises(ValueError, match="unknown latency kind"):
+        make_latency_sampler("nope", 10.0, 500.0)
+
+
+def test_lognormal_latency_runs_in_sim(world):
+    """SimConfig.latency_kind='lognormal' drives a full async run, on both
+    engines, with identical event streams."""
+    cfg, clients, test, params = world
+    kw = dict(latency_kind="lognormal", **QUICK)
+    seq = run_algorithm("fedasync", cfg, params, clients, test,
+                        SimConfig(engine="sequential", **kw))
+    coh = run_algorithm("fedasync", cfg, params, clients, test,
+                        SimConfig(engine="cohort", **kw))
+    assert seq.dispatches == coh.dispatches > 0
+    assert seq.receive_log == coh.receive_log
+    np.testing.assert_allclose(coh.final_accuracy, seq.final_accuracy,
+                               atol=1e-4)
+
 
 # ---------------------------------------------------------------------------
 # Unit: availability distributions
