@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-multidevice golden golden-regen golden-check \
-	bench-smoke bench bench-sim
+	bench-smoke bench bench-sim bench-sweep
 
 test:
 	$(PY) -m pytest -x -q
@@ -50,6 +50,13 @@ bench-smoke:
 bench-sim:
 	$(PY) -m benchmarks.sim_throughput
 	$(PY) -m benchmarks.sim_throughput --family
+
+# Fleet sweep throughput: S-lane run_sweep vs a python loop of standalone
+# runs; writes artifacts/bench/BENCH_sweep_throughput.json (gate: >= 3x
+# aggregate run-throughput at S=8 on the overhead-bound fedasync cell).
+# Narrow with SWEEP_BENCH_LANES=4 for a smoke run.
+bench-sweep:
+	$(PY) -m benchmarks.sweep_throughput
 
 bench:
 	$(PY) -m benchmarks.run

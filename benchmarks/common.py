@@ -19,7 +19,7 @@ from repro.core import PSAConfig
 from repro.data import (ClientDataset, dirichlet_partition, iid_partition,
                         make_calibration_batch, make_classification,
                         train_test_split)
-from repro.federated import SimConfig, run_algorithm
+from repro.federated import SimConfig, SweepConfig, run_algorithm, run_sweep
 from repro.models import model as model_lib
 
 FULL = os.environ.get("BENCH_FULL", "0") == "1"
@@ -76,6 +76,25 @@ def run_cell(alg: str, alpha: float, *, sim: Optional[SimConfig] = None,
     res = run_algorithm(alg, cfg, params, clients, test, sim,
                         psa_cfg=psa or PSAConfig(),
                         calib_batch=calib[calib_source], **kw)
+    res.wall_s = time.time() - t0
+    return res
+
+
+def sweep_cell(alg: str, alpha: float, sweep: SweepConfig, *,
+               sim: Optional[SimConfig] = None,
+               psa: Optional[PSAConfig] = None,
+               calib_source: str = "gaussian",
+               model: str = "paper-synthetic-mlp", seed: int = 0, **kw):
+    """Run S lanes of one benchmark cell as ONE batched simulation
+    (``run_sweep``): same world/timeline as the matching ``run_cell``, with
+    the lane grid (seeds / timeline-preserving hyperparameters) from
+    ``sweep``. Returns a ``SweepResult`` (``.lane(k)`` views one lane)."""
+    cfg, clients, test, calib, params = world(alpha, model, seed)
+    sim = sim or sim_config(seed=seed)
+    t0 = time.time()
+    res = run_sweep(alg, cfg, params, clients, test, sim, sweep,
+                    psa_cfg=psa or PSAConfig(),
+                    calib_batch=calib[calib_source], **kw)
     res.wall_s = time.time() - t0
     return res
 

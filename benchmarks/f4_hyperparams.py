@@ -4,12 +4,19 @@ Grid over (gamma, delta) and (L_s buffer, L_q queue). Claims validated:
 * performance degrades only when gamma AND delta are both very small
   (temperature collapses to ~0 -> argmax-like aggregation too early),
 * L_s in 5..20 and L_q in 10..50 are flat; very large L_s slows updates.
+
+The (gamma, delta) grid is timeline-preserving, so the WHOLE grid runs as
+one ``run_sweep`` call — one compiled step serves every point, the
+per-dispatch overhead is paid once instead of |grid| times. The (L_s, L_q)
+points change state SHAPES (ring buffer / thermometer queue), so each is
+its own single-lane sweep (a fresh compile per shape is unavoidable).
 """
 from __future__ import annotations
 
 import sys
 
 from repro.core import PSAConfig
+from repro.federated import SweepConfig
 from benchmarks import common
 
 GAMMA_DELTA_FULL = [(0.1, 0.05), (0.1, 0.5), (1, 0.5), (5, 0.5), (5, 2), (10, 1)]
@@ -23,18 +30,22 @@ def main(argv=None):
     sl = LS_LQ_FULL if common.FULL else LS_LQ_FAST
     horizon = common.HORIZON if common.FULL else 60_000.0
     rows = {}
-    for gamma, delta in gd:
-        psa = PSAConfig(gamma=gamma, delta=delta)
-        sim = common.sim_config(horizon=horizon, eval_every=horizon / 4)
-        res = common.run_cell("fedpsa", 0.1, sim=sim, psa=psa)
-        rows[f"gamma{gamma}_delta{delta}"] = res.final_accuracy
-        print(f"f4,gamma={gamma},delta={delta},{res.final_accuracy:.4f}")
+    # (gamma, delta): one lane per grid point, one batched simulation
+    sim = common.sim_config(horizon=horizon, eval_every=horizon / 4)
+    sweep = SweepConfig(policy_params=[
+        {"gamma": float(g), "delta": float(d)} for g, d in gd])
+    res = common.sweep_cell("fedpsa", 0.1, sweep, sim=sim, psa=PSAConfig())
+    for (gamma, delta), acc in zip(gd, res.final_accuracy):
+        rows[f"gamma{gamma}_delta{delta}"] = acc
+        print(f"f4,gamma={gamma},delta={delta},{acc:.4f}")
+    # (L_s, L_q): shape-changing -> one single-lane sweep per point
     for ls, lq in sl:
         psa = PSAConfig(buffer_size=ls, queue_len=lq)
         sim = common.sim_config(horizon=horizon, eval_every=horizon / 4)
-        res = common.run_cell("fedpsa", 0.1, sim=sim, psa=psa)
-        rows[f"Ls{ls}_Lq{lq}"] = res.final_accuracy
-        print(f"f4,Ls={ls},Lq={lq},{res.final_accuracy:.4f}")
+        res = common.sweep_cell("fedpsa", 0.1, SweepConfig(num_lanes=1),
+                                sim=sim, psa=psa)
+        rows[f"Ls{ls}_Lq{lq}"] = res.final_accuracy[0]
+        print(f"f4,Ls={ls},Lq={lq},{res.final_accuracy[0]:.4f}")
     common.save("f4_hyperparams", rows)
     # the paper's warning: both gamma and delta very small hurts
     small = rows.get("gamma0.1_delta0.05")

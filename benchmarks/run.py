@@ -14,8 +14,8 @@ import time
 def main() -> None:
     from benchmarks import (f2_motivation, f4_hyperparams, f5_overhead,
                             f6_kappa_alignment, kernel_micro, roofline,
-                            t1_t2_accuracy, t3_aulc, t4_latency,
-                            t5_calibration, t6_ablation)
+                            sweep_throughput, t1_t2_accuracy, t3_aulc,
+                            t4_latency, t5_calibration, t6_ablation)
     stages = [
         ("roofline", roofline.main),
         ("kernel_micro", kernel_micro.main),
@@ -28,6 +28,7 @@ def main() -> None:
         ("f6_kappa_alignment", f6_kappa_alignment.main),
         ("f2_motivation", f2_motivation.main),
         ("f4_hyperparams", f4_hyperparams.main),
+        ("sweep_throughput", sweep_throughput.main),
     ]
     t_all = time.time()
     failures = []

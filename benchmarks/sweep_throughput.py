@@ -1,0 +1,196 @@
+"""Sweep engine throughput: S-lane ``run_sweep`` vs a python loop of runs.
+
+The point of the lane axis: a multi-seed / multi-hyperparameter grid (the
+paper's Tables 1/2, Fig. 4, Table 6) should pay the simulator's
+per-dispatch python/jit overhead ONCE, not once per grid point. This
+benchmark runs the same S experiment variants (per-lane model/data seeds
+plus a small fedasync-alpha grid) twice on the paper MLP world:
+
+* ``loop``  — S standalone ``run_async`` calls sharing the timeline seed
+  (exactly what the benchmarks did before the sweep engine), and
+* ``sweep`` — ONE ``run_sweep`` call with S lanes,
+
+and reports aggregate run-throughput (completed runs / wall-second). Both
+sides get a full-length warmup so compile time is billed to neither.
+
+Regime (the CPU notes): XLA CPU does NOT vectorize the vmapped member/lane
+math — per-lane device cost is ~linear in S — so the lane win is overhead
+amortization, dominant only when per-dispatch math is small. The gated
+cells therefore run the overhead-bound FedSGD-style protocol (48-sample
+shards, ONE local step per dispatch: batch == shard, 1 epoch) where the
+python/jit per-wave overhead the lane axis shares dominates. The
+paper-protocol cell (E=5 epochs, batch 16: 60 local steps/dispatch) is
+recorded UNGATED for honesty: there device math dominates and the sweep
+approaches parity (~1.1-1.3x, never a loss).
+
+Writes artifacts/bench/BENCH_sweep_throughput.json. Acceptance gate
+(ISSUE 5): sweep >= 3x aggregate run-throughput at S=8 on the paper MLP
+(fedasync FedSGD cell; the fedpsa cell — which adds per-lane sketch
+refreshes — and the paper-protocol cell are recorded alongside). Override
+lanes with SWEEP_BENCH_LANES=4.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import PSAConfig
+from repro.data import ClientDataset, make_calibration_batch, make_classification
+from repro.federated import SimConfig, SweepConfig, run_async, run_sweep
+from repro.models import model as model_lib
+from benchmarks import common
+
+NUM_CLIENTS = 50
+LATENCY_LO, LATENCY_HI = 100.0, 500.0
+TARGET_DISPATCHES = 150
+LANES = int(os.environ.get("SWEEP_BENCH_LANES", "8"))
+GATE = 3.0
+
+# (samples/client, batch, epochs): the gated FedSGD-style regime (one local
+# step per dispatch) and the recorded paper protocol (60 steps/dispatch)
+FEDSGD = dict(samples_per_client=48, batch_size=48, local_epochs=1)
+PAPER = dict(samples_per_client=192, batch_size=16, local_epochs=5)
+
+_WORLD_CACHE = {}
+
+
+def build_world(samples_per_client: int = 192, seed: int = 0):
+    key = (samples_per_client, seed)
+    if key in _WORLD_CACHE:
+        return _WORLD_CACHE[key]
+    cfg = get_config("paper-synthetic-mlp")
+    n = NUM_CLIENTS * samples_per_client
+    full = make_classification(n + 1000, cfg.num_classes, dim=cfg.input_hw[0],
+                               seed=seed, class_sep=0.7)
+    test = full.subset(np.arange(n, n + 1000))
+    clients = [
+        ClientDataset(full.subset(np.arange(c * samples_per_client,
+                                            (c + 1) * samples_per_client)))
+        for c in range(NUM_CLIENTS)
+    ]
+    calib = make_calibration_batch(full.subset(np.arange(n)), 64, "gaussian")
+    params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
+    _WORLD_CACHE[key] = (cfg, clients, test, calib, params)
+    return _WORLD_CACHE[key]
+
+
+def horizon_for(target: int) -> float:
+    mean_lat = 0.5 * (LATENCY_LO + LATENCY_HI)
+    rate = 0.2 * NUM_CLIENTS / mean_lat
+    return max(target / rate, 2.0 * LATENCY_HI)
+
+
+def sim_kw(horizon: float, protocol: dict) -> dict:
+    return dict(num_clients=NUM_CLIENTS, concurrency=0.2,
+                local_epochs=protocol["local_epochs"],
+                batch_size=protocol["batch_size"],
+                horizon=horizon, eval_every=horizon, latency_kind="uniform",
+                latency_lo=LATENCY_LO, latency_hi=LATENCY_HI,
+                eval_batches=2, engine="cohort")
+
+
+def lane_grid(alg: str):
+    """S variants: per-lane model/data seeds, plus an alpha grid for the
+    fedasync cell (hyperparameter lanes must be timeline-preserving)."""
+    seeds = list(range(LANES))
+    if alg == "fedasync":
+        hypers = [{"alpha": round(0.3 + 0.05 * s, 2)} for s in range(LANES)]
+    else:
+        hypers = [None] * LANES
+    return seeds, hypers
+
+
+def bench_cell(alg: str, protocol: dict, label: str) -> dict:
+    cfg, clients, test, calib, params = build_world(
+        protocol["samples_per_client"])
+    horizon = horizon_for(TARGET_DISPATCHES)
+    kw = {}
+    if alg == "fedpsa":
+        kw = dict(psa_cfg=PSAConfig(), calib_batch=calib)
+    seeds, hypers = lane_grid(alg)
+    lane_params = [model_lib.init_params(jax.random.PRNGKey(s), cfg)
+                   for s in seeds]
+
+    def run_loop():
+        out = []
+        for s in seeds:
+            # the exact standalone equivalent of sweep lane s: shared
+            # timeline + data seed, per-lane init params and hyper
+            sim = SimConfig(seed=0, timeline_seed=0,
+                            **sim_kw(horizon, protocol))
+            skw = dict(kw)
+            if hypers[s]:
+                skw["server_kwargs"] = dict(hypers[s])
+            out.append(run_async(alg, cfg, lane_params[s], clients, test,
+                                 sim, **skw))
+        return out
+
+    def run_lanes():
+        sim = SimConfig(seed=0, timeline_seed=0, **sim_kw(horizon, protocol))
+        sweep = SweepConfig(model_seeds=seeds,
+                            policy_params=hypers)
+        return run_sweep(alg, cfg, params, clients, test, sim, sweep, **kw)
+
+    # full-length warmups: every wave/chunk bucket both paths hit is
+    # compiled before the timed runs
+    run_loop()
+    run_lanes()
+
+    t0 = time.perf_counter()
+    loop_res = run_loop()
+    t_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep_res = run_lanes()
+    t_sweep = time.perf_counter() - t0
+
+    dispatches = loop_res[0].dispatches
+    assert sweep_res.dispatches == dispatches, "timelines diverged"
+    # the sweep's lanes are the loop's runs: spot-check final accuracies
+    drift = float(np.max(np.abs(
+        np.asarray(sweep_res.final_accuracy)
+        - np.asarray([r.final_accuracy for r in loop_res]))))
+    cell = {
+        "alg": alg, "cell": label, "lanes": LANES, "horizon": horizon,
+        "protocol": dict(protocol),
+        "dispatches_per_run": dispatches,
+        "loop": {"wall_s": t_loop, "runs_per_s": LANES / t_loop},
+        "sweep": {"wall_s": t_sweep, "runs_per_s": LANES / t_sweep,
+                  "cohorts": sweep_res.cohorts},
+        "speedup": t_loop / t_sweep,
+        "max_final_accuracy_drift": drift,
+    }
+    print(f"sweep_throughput,cell={label},alg={alg},S={LANES},"
+          f"loop_s={t_loop:.2f},sweep_s={t_sweep:.2f},"
+          f"speedup={cell['speedup']:.2f}x,drift={drift:.2e}", flush=True)
+    return cell
+
+
+def main(argv=None):
+    cells = [bench_cell("fedasync", FEDSGD, "fedasync-fedsgd"),
+             bench_cell("fedpsa", FEDSGD, "fedpsa-fedsgd"),
+             bench_cell("fedasync", PAPER, "fedasync-paper-protocol")]
+    payload = {
+        "model": "paper-synthetic-mlp",
+        "backend": jax.default_backend(),
+        "num_clients": NUM_CLIENTS,
+        "gate": {"cell": "fedasync-fedsgd", "min_speedup": GATE,
+                 "at_lanes": 8},
+        "cells": cells,
+    }
+    path = common.save("BENCH_sweep_throughput", payload)
+    print(f"wrote {path}")
+    gate = [c for c in cells if c["cell"] == "fedasync-fedsgd"]
+    if gate and LANES >= 8 and gate[0]["speedup"] < GATE:
+        print(f"WARNING: sweep speedup at S={LANES} is "
+              f"{gate[0]['speedup']:.2f}x < {GATE}x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,20 +1,30 @@
 """Paper Table 6: component ablation — w/o T (thermometer), w/o S
 (sensitivity; raw-parameter sketch instead), w/o T&S, vs Full, under IID
 (alpha=1 ~ the paper's IID) and non-IID (alpha=0.1), at concurrency p.
+
+The thermometer switch is a traced per-lane hyperparameter
+(``use_thermometer``), so {full, wo_T} run as lanes of ONE batched
+simulation; ``use_sensitivity`` changes the client sketch PROGRAM (a
+structural parameter), so {wo_S, wo_TS} form a second two-lane sweep.
+Each (alpha, concurrency) cell therefore costs two compiled sweeps instead
+of four python-driven re-runs. alpha and p reshape the world/timeline and
+legitimately stay python loops.
 """
 from __future__ import annotations
 
 import sys
 
 from repro.core import PSAConfig
+from repro.federated import SweepConfig
 from benchmarks import common
 
-VARIANTS = {
-    "full": PSAConfig(),
-    "wo_T": PSAConfig(use_thermometer=False),
-    "wo_S": PSAConfig(use_sensitivity=False),
-    "wo_TS": PSAConfig(use_thermometer=False, use_sensitivity=False),
-}
+# lanes grouped by the structural use_sensitivity flag
+GROUPS = [
+    (PSAConfig(), (("full", None),
+                   ("wo_T", {"use_thermometer": False}))),
+    (PSAConfig(use_sensitivity=False), (("wo_S", None),
+                                        ("wo_TS", {"use_thermometer": False}))),
+]
 CONCURRENCY_FULL = (0.1, 0.2, 0.3)
 CONCURRENCY_FAST = (0.2,)
 
@@ -27,12 +37,15 @@ def main(argv=None):
     rows = {}
     for alpha, tag in ((1.0, "iid"), (0.1, "niid")):
         for p in ps:
-            for name, psa in VARIANTS.items():
+            for psa, variants in GROUPS:
                 sim = common.sim_config(concurrency=p, horizon=horizon,
                                         eval_every=horizon / 5)
-                res = common.run_cell("fedpsa", alpha, sim=sim, psa=psa)
-                rows[f"{name}@{tag}_p{p}"] = res.final_accuracy
-                print(f"t6,{name},{tag},p={p},{res.final_accuracy:.4f}")
+                sweep = SweepConfig(policy_params=[h for _, h in variants])
+                res = common.sweep_cell("fedpsa", alpha, sweep, sim=sim,
+                                        psa=psa)
+                for (name, _), acc in zip(variants, res.final_accuracy):
+                    rows[f"{name}@{tag}_p{p}"] = acc
+                    print(f"t6,{name},{tag},p={p},{acc:.4f}")
     common.save("t6_ablation", rows)
     for p in ps:
         full_ = rows[f"full@niid_p{p}"]

@@ -43,6 +43,15 @@ class PSAConfig:
     use_thermometer: bool = True  # False => fixed Temp = delta+gamma (w/o T ablation)
 
 
+def structural(cfg: PSAConfig) -> tuple:
+    """The shape/program-determining subset of a PSAConfig — what a compiled
+    server step actually closes over. gamma/delta/server_lr/use_thermometer
+    are *traced* hyperparameters (they may vary per sweep lane), so two
+    configs with equal ``structural()`` share one compiled step."""
+    return (cfg.buffer_size, cfg.queue_len, cfg.sketch_k, cfg.sketch_seed,
+            cfg.fisher_microbatches, cfg.use_sensitivity)
+
+
 def client_sketch(loss_fn: Callable, params, calib_batch, cfg: PSAConfig,
                   *, fused: Optional[bool] = None) -> jnp.ndarray:
     """What a client uploads alongside its update: the k-dim sensitivity
@@ -138,35 +147,63 @@ def buffer_full(state: PSAState) -> jnp.ndarray:
     return state.count >= state.buffer_size
 
 
-def _weights_and_temp(state: PSAState, cfg: PSAConfig):
+def _weights_and_temp(state: PSAState, cfg: PSAConfig, *, gamma=None,
+                      delta=None, thermo_on=None):
     """Eq. 18-19 with the Algorithm-1 phase switch as a jnp select: uniform
     averaging until the thermometer queue first fills, temperature softmax
-    afterwards (or always, with a fixed temp, under the w/o T ablation)."""
+    afterwards (or always, with a fixed temp, under the w/o T ablation).
+
+    ``gamma``/``delta``/``thermo_on`` default to the static config values;
+    passing traced scalars instead (the policy core reads them from
+    ``ServerState.hyper``) compiles ONE program that serves every value —
+    including a lane-stacked grid under vmap. With ``thermo_on`` given, the
+    w/o-T ablation becomes a jnp select with arithmetic identical to both
+    static branches."""
     L = state.buffer_size
     uniform = aggregation.uniform_weights(L)
-    if cfg.use_thermometer:
-        queue_ready = thermometer.is_full(state.thermo)
-        temp = thermometer.temperature(state.thermo, cfg.gamma, cfg.delta)
-        weights = jnp.where(queue_ready,
-                            aggregation.psa_weights(state.kappas, temp),
-                            uniform)
-        return weights, temp, queue_ready
-    temp = jnp.float32(cfg.gamma + cfg.delta)
-    return aggregation.psa_weights(state.kappas, temp), temp, jnp.bool_(True)
+    gamma = cfg.gamma if gamma is None else gamma
+    delta = cfg.delta if delta is None else delta
+    if thermo_on is None:
+        if cfg.use_thermometer:
+            queue_ready = thermometer.is_full(state.thermo)
+            temp = thermometer.temperature(state.thermo, gamma, delta)
+            weights = jnp.where(queue_ready,
+                                aggregation.psa_weights(state.kappas, temp),
+                                uniform)
+            return weights, temp, queue_ready
+        temp = (jnp.asarray(gamma, jnp.float32)
+                + jnp.asarray(delta, jnp.float32))
+        return aggregation.psa_weights(state.kappas, temp), temp, \
+            jnp.bool_(True)
+    thermo_on = jnp.asarray(thermo_on, jnp.bool_)
+    temp = jnp.where(thermo_on,
+                     thermometer.temperature(state.thermo, gamma, delta),
+                     jnp.asarray(gamma, jnp.float32)
+                     + jnp.asarray(delta, jnp.float32))
+    queue_ready = jnp.logical_or(jnp.logical_not(thermo_on),
+                                 thermometer.is_full(state.thermo))
+    weights = jnp.where(queue_ready,
+                        aggregation.psa_weights(state.kappas, temp), uniform)
+    return weights, temp, queue_ready
 
 
 def server_aggregate(state: PSAState, global_vec: jnp.ndarray,
-                     cfg: PSAConfig):
+                     cfg: PSAConfig, *, gamma=None, delta=None,
+                     server_lr=None, thermo_on=None):
     """Algorithm 1 lines 17-31 (pure): weight the buffered updates and apply
     them to the flat global vector via the Pallas buffer_agg kernel.
 
     Returns ``(new_state, new_global_vec, PSAInfo)`` — the same ordering as
     the fused ``server_step``. Call only when ``buffer_full`` (``server_step``
-    handles the gating for you).
+    handles the gating for you). The keyword hyperparameters accept traced
+    scalars (defaulting to the static config values) — see
+    ``_weights_and_temp``.
     """
-    weights, temp, temp_valid = _weights_and_temp(state, cfg)
-    new_global = aggregation.aggregate_flat(global_vec, state.buffer, weights,
-                                            cfg.server_lr)
+    weights, temp, temp_valid = _weights_and_temp(
+        state, cfg, gamma=gamma, delta=delta, thermo_on=thermo_on)
+    new_global = aggregation.aggregate_flat(
+        global_vec, state.buffer, weights,
+        cfg.server_lr if server_lr is None else server_lr)
     info = PSAInfo(updated=jnp.bool_(True), weights=weights,
                    kappas=state.kappas, temp=temp,
                    temp_valid=jnp.asarray(temp_valid),
@@ -177,20 +214,24 @@ def server_aggregate(state: PSAState, global_vec: jnp.ndarray,
 def server_step(state: PSAState, global_vec: jnp.ndarray,
                 update_vec: jnp.ndarray, client_sketch_vec: jnp.ndarray,
                 cfg: PSAConfig,
-                refresh_fn: Optional[Callable] = None):
+                refresh_fn: Optional[Callable] = None, *, gamma=None,
+                delta=None, server_lr=None, thermo_on=None):
     """One fused Algorithm-1 server step: receive, and — iff the buffer just
     filled — aggregate and refresh the global sketch, all under ``lax.cond``
     so the whole arrival path compiles to a single device call.
 
     ``refresh_fn(global_vec) -> (k,)`` recomputes the global model's
     sensitivity sketch after an update (traced into the taken branch only).
-    Returns ``(new_state, new_global_vec, PSAInfo)``.
+    The keyword hyperparameters accept traced scalars (default: the static
+    config values). Returns ``(new_state, new_global_vec, PSAInfo)``.
     """
     state = server_receive(state, update_vec, client_sketch_vec)
     L = state.buffer_size
 
     def do_aggregate(state, global_vec):
-        state, new_global, info = server_aggregate(state, global_vec, cfg)
+        state, new_global, info = server_aggregate(
+            state, global_vec, cfg, gamma=gamma, delta=delta,
+            server_lr=server_lr, thermo_on=thermo_on)
         if refresh_fn is not None:
             state = state._replace(global_sketch=refresh_fn(new_global))
         return state, new_global, info

@@ -1,22 +1,28 @@
 from repro.federated.simulator import (
     SimConfig,
     SimResult,
+    SweepConfig,
+    SweepResult,
     run_algorithm,
     run_async,
     run_fedavg,
+    run_sweep,
     make_sketch_fn,
     make_sketch_fn_flat,
     ALGORITHMS,
     ENGINES,
 )
 from repro.federated.cohort import CohortEngine
-from repro.federated.servers import (make_server, PolicyServer,
+from repro.federated.servers import (make_server, make_lane_server,
+                                     LanePolicyServer, PolicyServer,
                                      ShardedPolicyServer, server_state_specs)
 from repro.federated.policies import (
     Arrival,
     Policy,
+    PolicyParams,
     ServerState,
     StepInfo,
+    make_hyper,
     make_policy,
     POLICY_NAMES,
 )

@@ -127,7 +127,7 @@ class CohortEngine:
         if key not in _RUN_CACHE:
             _RUN_CACHE[key] = self._build(cfg, spec, self.prox, self.align,
                                           fam)
-        self._run = _RUN_CACHE[key]
+        self._run, self._run_lanes = _RUN_CACHE[key]
 
     # -- compiled core ------------------------------------------------------
 
@@ -176,7 +176,24 @@ class CohortEngine:
                 lr_steps)
             return w - params_stack, w
 
-        return run
+        # The sweep engine's variant: one more vmap over a leading lane
+        # axis. Lanes share the data slab, the member (client) assignment,
+        # the validity masks/counts (schedule shapes depend only on client
+        # sizes) and the lr schedule — all lane-invariant because the event
+        # timeline is shared; the dispatch snapshots and the batch-index
+        # permutations are per-lane (per-lane weights / shuffle seeds).
+        over_members = jax.vmap(member, in_axes=(None, None, 0, 0, 0, 0, 0, 0))
+
+        @jax.jit
+        def run_lanes(x_all, y_all, params_stack, cids, idx, valid, counts,
+                      lr_steps):
+            w = jax.vmap(over_members,
+                         in_axes=(None, None, 0, None, 0, None, None, None))(
+                x_all, y_all, params_stack, cids, idx, valid, counts,
+                lr_steps)
+            return w - params_stack, w
+
+        return run, run_lanes
 
     # -- host driver --------------------------------------------------------
 
@@ -246,3 +263,59 @@ class CohortEngine:
                 for a in args)
         deltas, w = self._run(self.x, self.y, *args)
         return deltas[:B], w[:B]
+
+    def sweep_update(self, params_stack: jnp.ndarray, cids: Sequence[int],
+                     lrs: Sequence[float], seeds_per_lane: np.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Train one wave for all S sweep lanes in ONE compiled call.
+
+        ``params_stack`` is the ``(S, B, d)`` stack of per-lane dispatch
+        snapshots; ``cids``/``lrs`` are shared across lanes (the event
+        timeline is lane-invariant); ``seeds_per_lane`` is ``(S, B)`` —
+        per-lane client-shuffle seeds for the wave's members. Returns
+        ``(deltas, new_params)``, both ``(S, B, d)``. Lane ``s`` is
+        arithmetically identical to ``cohort_update`` on that lane's
+        snapshots/seeds: the member program is the same, vmapped once more
+        over the lane axis.
+        """
+        S, B = int(params_stack.shape[0]), int(params_stack.shape[1])
+        assert B >= 1 and S >= 1
+        assert self.mesh is None, "sweeps run single-device (no mesh support)"
+        cids = np.asarray(cids, np.int32)
+        seeds_per_lane = np.asarray(seeds_per_lane)
+        # Schedule shapes (valid masks, per-step counts) depend only on
+        # client sizes — lane-invariant; only the index permutations are
+        # per-lane. Lanes sharing a seed row share one schedule build.
+        built = {}
+        idx = np.zeros((S, B, self.num_steps, self.bs_pad), np.int32)
+        valid = counts = nvalid = None
+        for s in range(S):
+            key = tuple(int(v) for v in seeds_per_lane[s])
+            if key not in built:
+                built[key] = self._schedules(cids, seeds_per_lane[s])
+            idx[s], valid, counts, nvalid = built[key]
+        lr_steps = (np.asarray(lrs, np.float64)[:, None]
+                    * (nvalid > 0.0)).astype(np.float32)
+        Bp = bucket_size(B, self._data_kind)
+        if Bp > B:
+            pad = Bp - B
+
+            def padded(a, fill=0):
+                ext = np.full((pad,) + a.shape[1:], fill, a.dtype)
+                return np.concatenate([a, ext])
+
+            params_stack = jnp.concatenate(
+                [params_stack,
+                 jnp.zeros((S, pad, params_stack.shape[2]),
+                           params_stack.dtype)], axis=1)
+            idx = np.concatenate(
+                [idx, np.zeros((S, pad) + idx.shape[2:], idx.dtype)], axis=1)
+            cids = padded(cids)
+            valid, lr_steps = padded(valid), padded(lr_steps)
+            counts = np.concatenate(
+                [counts, np.ones((pad,) + counts.shape[1:], counts.dtype)])
+        deltas, w = self._run_lanes(
+            self.x, self.y, params_stack, jnp.asarray(cids),
+            jnp.asarray(idx), jnp.asarray(valid), jnp.asarray(counts),
+            jnp.asarray(lr_steps))
+        return deltas[:, :B], w[:, :B]

@@ -42,19 +42,43 @@ def make_latency_sampler(kind: str, lo: float, hi: float, seed: int = 0):
     return sample
 
 
+def _subseed(seed: int, stream: int) -> int:
+    """Derive decorrelated 32-bit sub-seeds from one base seed (multiplicative
+    hashing): distinct streams must never share a MT19937 state."""
+    return (int(seed) * 0x9E3779B1 + 0x85EBCA77 * (stream + 1)) % (2 ** 32)
+
+
+class PerClientLatency:
+    """Fixed mean latency per client + per-dispatch jitter, as in FLGO:
+    heterogeneity lives across clients, not only across dispatches.
+
+    The per-client means and the per-dispatch jitter draw from DISTINCT
+    sub-seeded RNG streams (they used to share ``RandomState(seed)``, which
+    correlated the means with the first jitter draws). The jitter stream is
+    exposed as ``self.rng`` so the simulator can snapshot/restore it across
+    checkpoints.
+    """
+
+    def __init__(self, kind: str, lo: float, hi: float, num_clients: int,
+                 seed: int = 0):
+        sampler = make_latency_sampler(kind, lo, hi, _subseed(seed, 0))
+        self.means = np.array([sampler() for _ in range(num_clients)])
+        self.lo, self.hi = lo, hi
+        self.rng = np.random.RandomState(_subseed(seed, 1))
+
+    def __call__(self, client_id: int) -> float:
+        jitter = self.rng.uniform(0.9, 1.1)
+        return float(np.clip(self.means[client_id] * jitter,
+                             self.lo, self.hi))
+
+
 def per_client_latency(kind: str, lo: float, hi: float, num_clients: int,
                        seed: int = 0):
-    """Fixed mean latency per client + per-dispatch jitter, as in FLGO:
-    heterogeneity lives across clients, not only across dispatches."""
-    rng = np.random.RandomState(seed)
-    sampler = make_latency_sampler(kind, lo, hi, seed)
-    means = np.array([sampler() for _ in range(num_clients)])
-
-    def sample(client_id: int) -> float:
-        jitter = rng.uniform(0.9, 1.1)
-        return float(np.clip(means[client_id] * jitter, lo, hi))
-
-    return sample, means
+    """Build the per-client latency process; returns (sampler, means) where
+    ``sampler(client_id)`` draws one jittered response time (and carries its
+    RNG as ``sampler.rng`` — see ``PerClientLatency``)."""
+    lat = PerClientLatency(kind, lo, hi, num_clients, seed)
+    return lat, lat.means
 
 
 AVAILABILITY_KINDS = ("always", "uniform", "hetero", "slow-fragile")

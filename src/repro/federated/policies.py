@@ -13,6 +13,17 @@ same fused step; FedPSA's global-sketch refresh is traced into the taken
 branch of the cond). Buffered Eq. 20 applies run through the Pallas
 ``buffer_agg`` kernel over the flat layout.
 
+Timeline-preserving hyperparameters (fedasync's mixing alpha, fedbuff's
+staleness exponent, FedPSA's temperature slope/floor, server learning rates,
+...) live in ``ServerState.hyper`` — a ``PolicyParams`` pytree of traced
+scalars — NOT in python closures. Two consequences: (a) runs that differ
+only in such a hyperparameter share ONE compiled step (the step functions
+themselves are cached by structural key: flat layout + buffer shapes), and
+(b) stacking ``ServerState`` with a leading lane axis and ``jax.vmap``-ing
+the step runs a whole hyperparameter grid as one batched simulation (the
+sweep engine, ``federated.simulator.run_sweep``). Shape-determining
+parameters (``buffer_size``, ``queue_len``, ``sketch_k``) remain static.
+
 Staleness weighting is a design space (AsyncFedED's Euclidean-distance
 adaptive weights, the distance-metric ablations of "Revisiting Gradient
 Staleness", the paper's behavioral kappa) — adding a policy means writing
@@ -36,6 +47,50 @@ from repro.common import tree as tu
 from repro.core import aggregation, psa as psa_lib
 
 
+class PolicyParams(NamedTuple):
+    """Timeline-preserving hyperparameters as traced scalars, one uniform
+    pytree for every policy (a policy simply ignores the fields it does not
+    read — dead leaves cost nothing under jit). Lives in
+    ``ServerState.hyper``, so a lane-stacked state carries per-lane values.
+
+    Everything here may vary per sweep lane; anything that changes state
+    SHAPES (buffer_size, queue_len, sketch_k, num_clients) or the client
+    program (use_sensitivity) must NOT be here — lanes share those.
+    """
+    alpha: jnp.ndarray = None            # fedasync / asyncfeded mixing
+    a: jnp.ndarray = None                # staleness polynomial exponent
+    server_lr: jnp.ndarray = None        # buffered-apply learning rate
+    beta: jnp.ndarray = None             # fedfa recency decay
+    gamma: jnp.ndarray = None            # fedpsa temperature slope
+    delta: jnp.ndarray = None            # fedpsa temperature floor
+    eps: jnp.ndarray = None              # asyncfeded distance epsilon
+    use_thermometer: jnp.ndarray = None  # fedpsa w/o-T ablation switch
+
+
+HYPER_DEFAULTS = dict(alpha=0.6, a=0.5, server_lr=1.0, beta=0.5, gamma=5.0,
+                      delta=0.5, eps=1e-8, use_thermometer=True)
+HYPER_FIELDS = PolicyParams._fields
+
+
+def make_hyper(**kw) -> PolicyParams:
+    """Concrete ``PolicyParams`` from keyword overrides over the defaults.
+
+    Raises on unknown keys — in particular on shape-determining parameters
+    (buffer_size, queue_len, sketch_k), which cannot vary per lane.
+    """
+    bad = sorted(set(kw) - set(HYPER_FIELDS))
+    if bad:
+        raise ValueError(
+            f"unknown policy hyperparameter(s) {bad}; per-lane tunables are "
+            f"{sorted(HYPER_FIELDS)} (shape parameters like buffer_size/"
+            f"queue_len/sketch_k are static and must be shared)")
+    vals = dict(HYPER_DEFAULTS)
+    vals.update(kw)
+    return PolicyParams(**{
+        k: (jnp.asarray(bool(v)) if k == "use_thermometer"
+            else jnp.float32(v)) for k, v in vals.items()})
+
+
 class RingState(NamedTuple):
     """Fixed-size stacked ring buffer over the flat parameter layout."""
     data: jnp.ndarray    # (L, d) f32
@@ -55,12 +110,16 @@ class CacheState(NamedTuple):
 
 class ServerState(NamedTuple):
     """One pytree for every policy; unused sub-states are None (static
-    structure, so each policy jit-compiles its own step once)."""
+    structure, so each policy jit-compiles its own step once). ``hyper``
+    holds the policy's traced hyperparameters — per-lane when the state is
+    stacked with a leading lane axis (``federated.servers.LanePolicyServer``).
+    """
     params: jnp.ndarray                         # (d,) flat f32 global model
     version: jnp.ndarray                        # int32 completed updates
     ring: Optional[RingState]
     psa: Optional[psa_lib.PSAState]
     cache: Optional[CacheState]
+    hyper: Optional[PolicyParams] = None
 
 
 class Arrival(NamedTuple):
@@ -87,13 +146,22 @@ class StepInfo(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class Policy:
-    """The pluggable staleness-policy interface."""
+    """The pluggable staleness-policy interface.
+
+    ``init(params, hyper=None)`` builds the state with the factory-call
+    hyperparameters unless an explicit ``PolicyParams`` is given (the sweep
+    engine inits each lane with its own). ``hyper_defaults`` records the
+    factory-call values as a hashable ``(field, value)`` tuple so callers
+    (``run_sweep``) can merge per-lane overrides on top of them.
+    """
     name: str
-    init: Callable[[Any], ServerState]           # params pytree -> state
+    init: Callable[..., ServerState]             # (params[, hyper]) -> state
     step: Callable[[ServerState, Arrival], Tuple[ServerState, StepInfo]]
     spec: tu.FlatSpec                            # flat <-> pytree layout
     # the unjitted step — what batched ingest scans over (wave of arrivals
-    # as one device call); ``step`` is jit_step(raw_step)
+    # as one device call); ``step`` is jit_step(raw_step). Shared across
+    # policies that differ only in hyper values (structural step cache), so
+    # keying compiled artifacts on ``raw_step`` maximizes jit reuse.
     raw_step: Optional[Callable[[ServerState, Arrival],
                                 Tuple[ServerState, StepInfo]]] = None
     sketch_k: int = 0
@@ -102,6 +170,7 @@ class Policy:
     # (StepInfo, meta) -> host log dict for an applied update, or None.
     # Owned by the policy so new policies get logging without shim edits.
     log_fn: Optional[Callable[[StepInfo, dict], Optional[dict]]] = None
+    hyper_defaults: tuple = ()                   # ((field, value), ...)
 
 
 def _log_mix(info: StepInfo, meta: dict) -> dict:
@@ -122,6 +191,22 @@ def jit_step(fn):
     return jax.jit(fn, donate_argnums=(0,))
 
 
+# Step functions cached by STRUCTURAL key (policy name + flat layout + buffer
+# shapes + sketch-refresh identity) — hyper values live in the traced state,
+# so every hyperparameter setting of a policy shares one (raw_step, step)
+# pair and with it one jit cache entry per arrival shape.
+_STEP_FN_CACHE: dict = {}
+
+
+def _shared_steps(key, build):
+    hit = _STEP_FN_CACHE.get(key)
+    if hit is None:
+        raw = build()
+        hit = (raw, jit_step(raw))
+        _STEP_FN_CACHE[key] = hit
+    return hit
+
+
 def _ring_push(ring: RingState, row: jnp.ndarray) -> RingState:
     data, _ = tu.ring_update(ring.data, row.astype(jnp.float32), ring.count)
     return RingState(data=data, count=ring.count + 1)
@@ -140,31 +225,48 @@ def make_info(L: int, *, updated, weights=None, kappas=None, temp=0.0,
     )
 
 
-def base_state(spec: tu.FlatSpec, params) -> ServerState:
+def base_state(spec: tu.FlatSpec, params,
+               hyper: Optional[PolicyParams] = None) -> ServerState:
     # copy: for a single-leaf f32 tree flatten can alias the caller's buffer,
-    # which the donating step would invalidate on the first receive
+    # which the donating step would invalidate on the first receive; the
+    # hyper leaves are copied for the same reason (the policy's default
+    # PolicyParams is shared by every server built from the cached Policy)
     vec = jnp.array(spec.flatten(params), copy=True)
+    hyper = make_hyper() if hyper is None else hyper
     return ServerState(params=vec, version=jnp.int32(0),
-                       ring=None, psa=None, cache=None)
+                       ring=None, psa=None, cache=None,
+                       hyper=jax.tree_util.tree_map(jnp.copy, hyper))
 
 
 # ---------------------------------------------------------------------------
 # Immediate-mix policies (one global update per arrival)
 # ---------------------------------------------------------------------------
 
+def _base_init(spec: tu.FlatSpec, hyper: PolicyParams):
+    def init(params, h: Optional[PolicyParams] = None) -> ServerState:
+        return base_state(spec, params, hyper if h is None else h)
+    return init
+
+
 def fedasync_policy(spec: tu.FlatSpec, alpha: float = 0.6,
                     a: float = 0.5) -> Policy:
     """FedAsync: w <- (1-s)w + s*w_i with s = alpha*(1+tau)^-a."""
 
-    def step(state: ServerState, arr: Arrival):
-        s = aggregation.staleness_polynomial(arr.tau, alpha, a)
-        wi = spec.flatten(arr.client_params)
-        params = (1.0 - s) * state.params + s * wi
-        state = state._replace(params=params, version=state.version + 1)
-        return state, make_info(0, updated=True, mix=s)
+    def build():
+        def step(state: ServerState, arr: Arrival):
+            h = state.hyper
+            s = aggregation.staleness_polynomial(arr.tau, h.alpha, h.a)
+            wi = spec.flatten(arr.client_params)
+            params = (1.0 - s) * state.params + s * wi
+            state = state._replace(params=params, version=state.version + 1)
+            return state, make_info(0, updated=True, mix=s)
+        return step
 
-    return Policy(name="fedasync", init=lambda p: base_state(spec, p),
-                  step=jit_step(step), raw_step=step, spec=spec, log_fn=_log_mix)
+    raw, jitted = _shared_steps(("fedasync", spec), build)
+    return Policy(name="fedasync",
+                  init=_base_init(spec, make_hyper(alpha=alpha, a=a)),
+                  step=jitted, raw_step=raw, spec=spec, log_fn=_log_mix,
+                  hyper_defaults=(("alpha", alpha), ("a", a)))
 
 
 def asyncfeded_policy(spec: tu.FlatSpec, alpha: float = 0.6,
@@ -181,20 +283,27 @@ def asyncfeded_policy(spec: tu.FlatSpec, alpha: float = 0.6,
     exactly its relative drift. One-function variant proving the policy
     interface is pluggable."""
 
-    def step(state: ServerState, arr: Arrival):
-        dw = spec.flatten(arr.update)
-        wi = spec.flatten(arr.client_params)
-        # param_axis_sum: these d-contractions psum across shards when the
-        # step is traced under the sharded server's shard_map
-        dist = jnp.sqrt(sharding.param_axis_sum(jnp.square(wi - state.params)))
-        norm = jnp.sqrt(sharding.param_axis_sum(jnp.square(dw)))
-        s = alpha * jnp.minimum(1.0, norm / (dist + eps))
-        state = state._replace(params=state.params + s * dw,
-                               version=state.version + 1)
-        return state, make_info(0, updated=True, mix=s)
+    def build():
+        def step(state: ServerState, arr: Arrival):
+            h = state.hyper
+            dw = spec.flatten(arr.update)
+            wi = spec.flatten(arr.client_params)
+            # param_axis_sum: these d-contractions psum across shards when
+            # the step is traced under the sharded server's shard_map
+            dist = jnp.sqrt(
+                sharding.param_axis_sum(jnp.square(wi - state.params)))
+            norm = jnp.sqrt(sharding.param_axis_sum(jnp.square(dw)))
+            s = h.alpha * jnp.minimum(1.0, norm / (dist + h.eps))
+            state = state._replace(params=state.params + s * dw,
+                                   version=state.version + 1)
+            return state, make_info(0, updated=True, mix=s)
+        return step
 
-    return Policy(name="asyncfeded", init=lambda p: base_state(spec, p),
-                  step=jit_step(step), raw_step=step, spec=spec, log_fn=_log_mix)
+    raw, jitted = _shared_steps(("asyncfeded", spec), build)
+    return Policy(name="asyncfeded",
+                  init=_base_init(spec, make_hyper(alpha=alpha, eps=eps)),
+                  step=jitted, raw_step=raw, spec=spec, log_fn=_log_mix,
+                  hyper_defaults=(("alpha", alpha), ("eps", eps)))
 
 
 # ---------------------------------------------------------------------------
@@ -202,51 +311,63 @@ def asyncfeded_policy(spec: tu.FlatSpec, alpha: float = 0.6,
 # ---------------------------------------------------------------------------
 
 def _buffered_policy(name: str, spec: tu.FlatSpec, buffer_size: int,
-                     server_lr: float, scale_fn, client_align: float = 0.0):
+                     hyper: PolicyParams, defaults: tuple, scale_fn,
+                     client_align: float = 0.0):
     """Shared skeleton for FedBuff/FedPAC-lite: ring the (optionally
-    staleness-scaled) deltas, apply their uniform mean when full."""
+    staleness-scaled) deltas, apply their uniform mean when full.
+    ``scale_fn(arr, hyper)`` reads its knobs from the traced hyper leaves."""
     L = buffer_size
 
-    def init(params) -> ServerState:
-        base = base_state(spec, params)
+    def init(params, h: Optional[PolicyParams] = None) -> ServerState:
+        base = base_state(spec, params, hyper if h is None else h)
         return base._replace(ring=RingState(
             data=jnp.zeros((L, spec.size), jnp.float32), count=jnp.int32(0)))
 
-    def step(state: ServerState, arr: Arrival):
-        dw = spec.flatten(arr.update)
-        ring = _ring_push(state.ring, scale_fn(arr) * dw)
+    def build():
+        def step(state: ServerState, arr: Arrival):
+            h = state.hyper
+            dw = spec.flatten(arr.update)
+            ring = _ring_push(state.ring, scale_fn(arr, h) * dw)
 
-        def flush(state, ring):
-            w = aggregation.uniform_weights(L)
-            params = aggregation.aggregate_flat(state.params, ring.data, w,
-                                               server_lr)
-            state = state._replace(params=params, version=state.version + 1,
-                                   ring=ring._replace(count=jnp.int32(0)))
-            return state, make_info(L, updated=True, weights=w)
+            def flush(state, ring):
+                w = aggregation.uniform_weights(L)
+                params = aggregation.aggregate_flat(state.params, ring.data,
+                                                    w, h.server_lr)
+                state = state._replace(params=params,
+                                       version=state.version + 1,
+                                       ring=ring._replace(count=jnp.int32(0)))
+                return state, make_info(L, updated=True, weights=w)
 
-        def wait(state, ring):
-            return state._replace(ring=ring), make_info(L, updated=False)
+            def wait(state, ring):
+                return state._replace(ring=ring), make_info(L, updated=False)
 
-        return jax.lax.cond(ring.count >= L, flush, wait, state, ring)
+            return jax.lax.cond(ring.count >= L, flush, wait, state, ring)
+        return step
 
-    return Policy(name=name, init=init, step=jit_step(step), raw_step=step, spec=spec,
-                  client_align=client_align)
+    raw, jitted = _shared_steps((name, spec, L), build)
+    return Policy(name=name, init=init, step=jitted, raw_step=raw, spec=spec,
+                  client_align=client_align, hyper_defaults=defaults)
 
 
 def fedbuff_policy(spec: tu.FlatSpec, buffer_size: int = 5,
                    server_lr: float = 1.0, a: float = 0.5) -> Policy:
     """FedBuff: buffer K staleness-scaled deltas, apply their mean."""
     return _buffered_policy(
-        "fedbuff", spec, buffer_size, server_lr,
-        lambda arr: aggregation.staleness_polynomial(arr.tau, 1.0, a))
+        "fedbuff", spec, buffer_size,
+        make_hyper(server_lr=server_lr, a=a),
+        (("server_lr", server_lr), ("a", a)),
+        lambda arr, h: aggregation.staleness_polynomial(arr.tau, 1.0, h.a))
 
 
 def fedpac_policy(spec: tu.FlatSpec, buffer_size: int = 5,
                   server_lr: float = 1.0) -> Policy:
     """FedPAC-lite: FedBuff-style buffering of raw deltas; clients train with
     an extra classifier-alignment term (client.local_update(align=...))."""
-    return _buffered_policy("fedpac", spec, buffer_size, server_lr,
-                            lambda arr: jnp.float32(1.0), client_align=0.1)
+    return _buffered_policy("fedpac", spec, buffer_size,
+                            make_hyper(server_lr=server_lr),
+                            (("server_lr", server_lr),),
+                            lambda arr, h: jnp.float32(1.0),
+                            client_align=0.1)
 
 
 def fedpsa_policy(spec: tu.FlatSpec, cfg: psa_lib.PSAConfig,
@@ -254,10 +375,16 @@ def fedpsa_policy(spec: tu.FlatSpec, cfg: psa_lib.PSAConfig,
     """FedPSA (Algorithm 1): behavioral-staleness softmax over the buffer.
 
     ``sketch_refresh(flat_params) -> (k,)`` recomputes the global sketch
-    after each aggregation, inside the fused step (cond's taken branch)."""
+    after each aggregation, inside the fused step (cond's taken branch).
+    The temperature knobs (gamma/delta), server_lr, and the w/o-T ablation
+    switch are traced from ``state.hyper`` (so they may vary per lane);
+    buffer_size/queue_len/sketch_k and use_sensitivity stay static."""
+    hyper = make_hyper(gamma=cfg.gamma, delta=cfg.delta,
+                       server_lr=cfg.server_lr,
+                       use_thermometer=cfg.use_thermometer)
 
-    def init(params) -> ServerState:
-        base = base_state(spec, params)
+    def init(params, h: Optional[PolicyParams] = None) -> ServerState:
+        base = base_state(spec, params, hyper if h is None else h)
         gs = None if sketch_refresh is None else sketch_refresh(base.params)
         return base._replace(psa=psa_lib.init_state(cfg, spec.size, gs))
 
@@ -268,19 +395,30 @@ def fedpsa_policy(spec: tu.FlatSpec, cfg: psa_lib.PSAConfig,
     refresh = None if sketch_refresh is None else (
         lambda vec: sketch_refresh(sharding.gather_param_axis(vec, spec.size)))
 
-    def step(state: ServerState, arr: Arrival):
-        dw = spec.flatten(arr.update)
-        psa, params, pi = psa_lib.server_step(
-            state.psa, state.params, dw, arr.sketch, cfg, refresh)
-        state = state._replace(
-            params=params, psa=psa,
-            version=state.version + pi.updated.astype(jnp.int32))
-        return state, make_info(cfg.buffer_size, updated=pi.updated,
-                            weights=pi.weights, kappas=pi.kappas,
-                            temp=pi.temp, temp_valid=pi.temp_valid)
+    def build():
+        def step(state: ServerState, arr: Arrival):
+            h = state.hyper
+            dw = spec.flatten(arr.update)
+            psa, params, pi = psa_lib.server_step(
+                state.psa, state.params, dw, arr.sketch, cfg, refresh,
+                gamma=h.gamma, delta=h.delta, server_lr=h.server_lr,
+                thermo_on=h.use_thermometer)
+            state = state._replace(
+                params=params, psa=psa,
+                version=state.version + pi.updated.astype(jnp.int32))
+            return state, make_info(cfg.buffer_size, updated=pi.updated,
+                                    weights=pi.weights, kappas=pi.kappas,
+                                    temp=pi.temp, temp_valid=pi.temp_valid)
+        return step
 
-    return Policy(name="fedpsa", init=init, step=jit_step(step), raw_step=step, spec=spec,
-                  sketch_k=cfg.sketch_k, needs_sketch=True, log_fn=_log_psa)
+    raw, jitted = _shared_steps(
+        ("fedpsa", spec, psa_lib.structural(cfg), sketch_refresh), build)
+    return Policy(name="fedpsa", init=init, step=jitted, raw_step=raw,
+                  spec=spec, sketch_k=cfg.sketch_k, needs_sketch=True,
+                  log_fn=_log_psa,
+                  hyper_defaults=(("gamma", cfg.gamma), ("delta", cfg.delta),
+                                  ("server_lr", cfg.server_lr),
+                                  ("use_thermometer", cfg.use_thermometer)))
 
 
 def ca2fl_policy(spec: tu.FlatSpec, num_clients: int, buffer_size: int = 5,
@@ -288,9 +426,10 @@ def ca2fl_policy(spec: tu.FlatSpec, num_clients: int, buffer_size: int = 5,
     """CA2FL: cached-update calibration. Buffers the residual vs the
     client's previous delta; aggregation adds the cache mean back."""
     L = buffer_size
+    hyper = make_hyper(server_lr=server_lr)
 
-    def init(params) -> ServerState:
-        base = base_state(spec, params)
+    def init(params, h: Optional[PolicyParams] = None) -> ServerState:
+        base = base_state(spec, params, hyper if h is None else h)
         return base._replace(
             ring=RingState(data=jnp.zeros((L, spec.size), jnp.float32),
                            count=jnp.int32(0)),
@@ -299,34 +438,41 @@ def ca2fl_policy(spec: tu.FlatSpec, num_clients: int, buffer_size: int = 5,
                 valid=jnp.zeros((num_clients,), jnp.bool_),
                 total=jnp.zeros((spec.size,), jnp.float32)))
 
-    def step(state: ServerState, arr: Arrival):
-        dw = spec.flatten(arr.update)
-        cid = arr.client_id
-        prev = state.cache.data[cid]  # zeros until the client is first seen
-        ring = _ring_push(state.ring, dw - prev)
-        cache = CacheState(data=state.cache.data.at[cid].set(dw),
-                           valid=state.cache.valid.at[cid].set(True),
-                           total=state.cache.total + dw - prev)
+    def build():
+        def step(state: ServerState, arr: Arrival):
+            h = state.hyper
+            dw = spec.flatten(arr.update)
+            cid = arr.client_id
+            prev = state.cache.data[cid]  # zeros until client is first seen
+            ring = _ring_push(state.ring, dw - prev)
+            cache = CacheState(data=state.cache.data.at[cid].set(dw),
+                               valid=state.cache.valid.at[cid].set(True),
+                               total=state.cache.total + dw - prev)
 
-        def flush(state, ring, cache):
-            w = aggregation.uniform_weights(L)
-            n_cached = jnp.maximum(
-                jnp.sum(cache.valid.astype(jnp.float32)), 1.0)
-            params = aggregation.aggregate_flat(state.params, ring.data, w,
-                                               server_lr)
-            params = params + server_lr * cache.total / n_cached
-            state = state._replace(params=params, version=state.version + 1,
-                                   ring=ring._replace(count=jnp.int32(0)),
-                                   cache=cache)
-            return state, make_info(L, updated=True, weights=w)
+            def flush(state, ring, cache):
+                w = aggregation.uniform_weights(L)
+                n_cached = jnp.maximum(
+                    jnp.sum(cache.valid.astype(jnp.float32)), 1.0)
+                params = aggregation.aggregate_flat(state.params, ring.data,
+                                                    w, h.server_lr)
+                params = params + h.server_lr * cache.total / n_cached
+                state = state._replace(params=params,
+                                       version=state.version + 1,
+                                       ring=ring._replace(count=jnp.int32(0)),
+                                       cache=cache)
+                return state, make_info(L, updated=True, weights=w)
 
-        def wait(state, ring, cache):
-            state = state._replace(ring=ring, cache=cache)
-            return state, make_info(L, updated=False)
+            def wait(state, ring, cache):
+                state = state._replace(ring=ring, cache=cache)
+                return state, make_info(L, updated=False)
 
-        return jax.lax.cond(ring.count >= L, flush, wait, state, ring, cache)
+            return jax.lax.cond(ring.count >= L, flush, wait, state, ring,
+                                cache)
+        return step
 
-    return Policy(name="ca2fl", init=init, step=jit_step(step), raw_step=step, spec=spec)
+    raw, jitted = _shared_steps(("ca2fl", spec, L, num_clients), build)
+    return Policy(name="ca2fl", init=init, step=jitted, raw_step=raw,
+                  spec=spec, hyper_defaults=(("server_lr", server_lr),))
 
 
 def fedfa_policy(spec: tu.FlatSpec, queue_len: int = 5,
@@ -337,27 +483,33 @@ def fedfa_policy(spec: tu.FlatSpec, queue_len: int = 5,
     stacked-buffer replacement for the legacy O(n) list.pop(0) queue)."""
     L = queue_len
 
-    def init(params) -> ServerState:
-        base = base_state(spec, params)
+    def init(params, h: Optional[PolicyParams] = None) -> ServerState:
+        base = base_state(spec, params,
+                          make_hyper(beta=beta) if h is None else h)
         return base._replace(ring=RingState(
             data=jnp.zeros((L, spec.size), jnp.float32), count=jnp.int32(0)))
 
-    def step(state: ServerState, arr: Arrival):
-        wi = spec.flatten(arr.client_params)
-        ring = _ring_push(state.ring, wi)
-        n = jnp.minimum(ring.count, L)
-        newest = jnp.mod(ring.count - 1, L)
-        age = jnp.mod(newest - jnp.arange(L, dtype=jnp.int32), L)
-        w = jnp.where(age < n, jnp.power(jnp.float32(beta),
-                                         age.astype(jnp.float32)), 0.0)
-        w = w / jnp.sum(w)
-        params = aggregation.aggregate_flat(
-            jnp.zeros_like(state.params), ring.data, w)
-        state = state._replace(params=params, version=state.version + 1,
-                               ring=ring)
-        return state, make_info(L, updated=True, weights=w)
+    def build():
+        def step(state: ServerState, arr: Arrival):
+            h = state.hyper
+            wi = spec.flatten(arr.client_params)
+            ring = _ring_push(state.ring, wi)
+            n = jnp.minimum(ring.count, L)
+            newest = jnp.mod(ring.count - 1, L)
+            age = jnp.mod(newest - jnp.arange(L, dtype=jnp.int32), L)
+            w = jnp.where(age < n,
+                          jnp.power(h.beta, age.astype(jnp.float32)), 0.0)
+            w = w / jnp.sum(w)
+            params = aggregation.aggregate_flat(
+                jnp.zeros_like(state.params), ring.data, w)
+            state = state._replace(params=params, version=state.version + 1,
+                                   ring=ring)
+            return state, make_info(L, updated=True, weights=w)
+        return step
 
-    return Policy(name="fedfa", init=init, step=jit_step(step), raw_step=step, spec=spec)
+    raw, jitted = _shared_steps(("fedfa", spec, L), build)
+    return Policy(name="fedfa", init=init, step=jitted, raw_step=raw,
+                  spec=spec, hyper_defaults=(("beta", beta),))
 
 
 # ---------------------------------------------------------------------------

@@ -173,15 +173,17 @@ class PolicyServer:
         return updated
 
     def _build_step_many(self):
-        # keyed on the policy (shared across servers via the policy cache),
-        # so repeated runs reuse one compiled scan per chunk size
-        cached = _STEP_MANY_CACHE.get(self.policy)
-        if cached is not None:
-            return cached
+        # keyed on the raw step — shared across every policy instance with
+        # the same structure (hyper values live in the traced state), so
+        # repeated runs AND hyperparameter grids reuse one compiled scan per
+        # chunk size
         raw = self.policy.raw_step
         assert raw is not None, f"{self.name} has no raw_step for batched ingest"
+        cached = _STEP_MANY_CACHE.get(raw)
+        if cached is not None:
+            return cached
         fn = jax.jit(_scan_many(raw), donate_argnums=(0,))
-        _STEP_MANY_CACHE[self.policy] = fn
+        _STEP_MANY_CACHE[raw] = fn
         return fn
 
     def receive_many(self, deltas, client_params, client_ids, data_sizes,
@@ -312,8 +314,10 @@ def server_state_specs(state: pol.ServerState, axis: str) -> pol.ServerState:
             buffer=mat, kappas=rep, count=rep,
             thermo=jax.tree_util.tree_map(lambda _: rep, state.psa.thermo),
             global_sketch=rep)
+    hyper = (None if state.hyper is None else
+             jax.tree_util.tree_map(lambda _: rep, state.hyper))
     return pol.ServerState(params=row, version=rep, ring=ring, psa=psa,
-                           cache=cache)
+                           cache=cache, hyper=hyper)
 
 
 def _arrival_specs(axis: str, batched: bool) -> pol.Arrival:
@@ -404,13 +408,13 @@ class ShardedPolicyServer(PolicyServer):
     # -- compiled steps ----------------------------------------------------
 
     def _build_step(self):
-        key = (self.policy, self.mesh, self.axis)
-        cached = _SHARDED_STEP_CACHE.get(key)
-        if cached is not None:
-            return cached
         raw = self.policy.raw_step
         assert raw is not None, \
             f"{self.name} has no raw_step; cannot run sharded"
+        key = (raw, self.mesh, self.axis)
+        cached = _SHARDED_STEP_CACHE.get(key)
+        if cached is not None:
+            return cached
         axis = self.axis
 
         def body(state, arr):
@@ -426,13 +430,13 @@ class ShardedPolicyServer(PolicyServer):
         return fn
 
     def _build_step_many(self):
-        key = (self.policy, self.mesh, self.axis)
-        cached = _SHARDED_MANY_CACHE.get(key)
-        if cached is not None:
-            return cached
         raw = self.policy.raw_step
         assert raw is not None, \
             f"{self.name} has no raw_step; cannot run sharded"
+        key = (raw, self.mesh, self.axis)
+        cached = _SHARDED_MANY_CACHE.get(key)
+        if cached is not None:
+            return cached
         axis = self.axis
         scan_many = _scan_many(raw)
 
@@ -449,6 +453,172 @@ class ShardedPolicyServer(PolicyServer):
             check_rep=False), donate_argnums=(0,))
         _SHARDED_MANY_CACHE[key] = fn
         return fn
+
+
+# ---------------------------------------------------------------------------
+# Lane-stacked execution layer (the sweep engine's server half)
+# ---------------------------------------------------------------------------
+
+_LANE_MANY_CACHE = {}
+
+
+class LanePolicyServer:
+    """S experiment lanes of one policy as ONE stacked server.
+
+    ``ServerState`` is stacked with a leading lane axis — per-lane global
+    vectors, ring buffers, PSA state AND per-lane ``PolicyParams`` hyper
+    leaves — and batched ingest runs ``jax.vmap`` of the same
+    ``_scan_many(raw_step)`` body the single-run server scans, so one
+    compiled program serves the whole hyperparameter/seed grid. The event
+    TIMELINE (completion order, client ids, version bookkeeping, data
+    sizes) is shared across lanes by construction: every policy's
+    update/flush decision depends only on arrival counts, never on
+    parameter values, so the ``updated`` flags are lane-invariant (asserted
+    at ingest).
+
+    Host-facing surface mirrors ``PolicyServer`` where it can: ``version``
+    (shared), ``flat_params`` — now ``(S, d)`` — and ``receive_many`` over
+    ``(S, B, d)`` stacks. Per-update host logs are not rendered (sweeps
+    consume digest streams and metrics instead).
+    """
+
+    def __init__(self, policy: pol.Policy, params_per_lane,
+                 hypers: List[pol.PolicyParams]):
+        assert len(params_per_lane) == len(hypers) and len(hypers) >= 1
+        self.policy = policy
+        self.name = policy.name
+        self.needs_sketch = policy.needs_sketch
+        self.client_align = policy.client_align
+        self.num_lanes = len(hypers)
+        states = [policy.init(p, h) for p, h in zip(params_per_lane, hypers)]
+        self.state = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *states)
+        self._step_many = None
+        self.log: List[dict] = []
+        self._version = 0
+        self._flat_cache = None
+        self._flat_cache_version = -1
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def flat_params(self) -> jnp.ndarray:
+        """(S, d) stack of the lanes' current global vectors (copied: the
+        live buffers are donated to the next jitted step)."""
+        if self._flat_cache_version != self._version:
+            self._flat_cache = jnp.copy(self.state.params)
+            self._flat_cache_version = self._version
+        return self._flat_cache
+
+    def _build_step_many(self):
+        raw = self.policy.raw_step
+        assert raw is not None, \
+            f"{self.name} has no raw_step; cannot run lane-stacked"
+        cached = _LANE_MANY_CACHE.get(raw)
+        if cached is not None:
+            return cached
+        scan_many = _scan_many(raw)
+        arr_axes = pol.Arrival(update=0, client_params=0, tau=None,
+                               client_id=None, data_size=None, sketch=0)
+        fn = jax.jit(jax.vmap(scan_many, in_axes=(0, arr_axes)),
+                     donate_argnums=(0,))
+        _LANE_MANY_CACHE[raw] = fn
+        return fn
+
+    def receive_many(self, deltas, client_params, client_ids, data_sizes,
+                     v_dispatch, sketches=None):
+        """Batched lane ingest: apply B completions to every lane at once.
+
+        ``deltas``/``client_params`` are ``(S, B, d)`` stacks (lane-major);
+        the scalar arrival fields are shared across lanes. Returns
+        ``(updated (B,) bool, taus (B,) ints, snapshots (S, B, d))`` — the
+        same contract as ``PolicyServer.receive_many`` with a lane axis on
+        the tensors.
+        """
+        if self.needs_sketch and sketches is None:
+            raise KeyError(f"{self.name} requires behavioral sketches")
+        S, B = int(deltas.shape[0]), int(deltas.shape[1])
+        assert S == self.num_lanes, (S, self.num_lanes)
+        ids = np.asarray(client_ids, np.int64)
+        if self.state.cache is not None:
+            n = self.state.cache.data.shape[1]
+            if ids.size and (ids.min() < 0 or ids.max() >= n):
+                raise ValueError(
+                    f"client_id outside the server's num_clients={n} cache")
+        if self._step_many is None:
+            self._step_many = self._build_step_many()
+        if sketches is None:
+            sketches = jnp.zeros((S, B, self.policy.sketch_k), jnp.float32)
+        state = self.state
+        upd_parts, snap_parts = [], []
+        off = 0
+        while off < B:
+            # largest power-of-two chunk, as in PolicyServer.receive_many
+            chunk = 1 << int(np.log2(B - off))
+            sl = slice(off, off + chunk)
+            arrs = pol.Arrival(
+                update=deltas[:, sl], client_params=client_params[:, sl],
+                tau=jnp.asarray(v_dispatch[sl], jnp.float32),
+                client_id=jnp.asarray(ids[sl], jnp.int32),
+                data_size=jnp.asarray(data_sizes[sl], jnp.float32),
+                sketch=sketches[:, sl])
+            state, infos, snaps = self._step_many(state, arrs)
+            upd_parts.append(np.asarray(infos.updated))   # (S, chunk) bool
+            snap_parts.append(snaps)
+            off += chunk
+        self.state = state
+        upd_lanes = np.concatenate(upd_parts, axis=1)
+        # the lane contract: update decisions are count-driven, never
+        # value-driven, so they cannot diverge across lanes
+        assert bool(np.all(upd_lanes == upd_lanes[:1])), \
+            "policy update decisions diverged across sweep lanes"
+        updated = upd_lanes[0]
+        snapshots = (snap_parts[0] if len(snap_parts) == 1
+                     else jnp.concatenate(snap_parts, axis=1))
+        taus: List[int] = []
+        v = self._version
+        for i in range(B):
+            taus.append(v - int(v_dispatch[i]))
+            v += int(updated[i])
+        self._version = v
+        return updated, taus, snapshots
+
+
+def make_lane_server(name: str, params_per_lane, lane_hypers, *,
+                     num_clients: int = 50,
+                     psa_cfg: Optional[psa_lib.PSAConfig] = None,
+                     sketch_fn: Optional[Callable] = None,
+                     **kw) -> LanePolicyServer:
+    """Build the lane-stacked server for one algorithm.
+
+    ``params_per_lane`` is a list of S parameter pytrees (identical
+    layouts); ``lane_hypers`` a list of S dicts of per-lane hyperparameter
+    overrides (``PolicyParams`` field names — e.g. ``{"alpha": 0.3}`` or
+    ``{"gamma": 0.1, "use_thermometer": False}``) merged over the policy's
+    factory defaults. Structural kwargs (buffer_size, psa_cfg shapes, ...)
+    are shared by all lanes — ``make_hyper`` rejects them per lane."""
+    spec = tu.FlatSpec(params_per_lane[0])
+    sketch_refresh = None
+    if name == "fedpsa":
+        assert psa_cfg is not None and sketch_fn is not None
+        key = (id(sketch_fn), spec)
+        sketch_refresh = _SKETCH_REFRESH_CACHE.get(key)
+        if sketch_refresh is None:
+            sketch_refresh = lambda vec: sketch_fn(spec.unflatten(vec))
+            sketch_refresh._sketch_fn = sketch_fn   # keep the id() key alive
+            _SKETCH_REFRESH_CACHE[key] = sketch_refresh
+    policy = pol.make_policy(name, spec, num_clients=num_clients,
+                             psa_cfg=psa_cfg, sketch_refresh=sketch_refresh,
+                             **kw)
+    defaults = dict(policy.hyper_defaults)
+    hypers = []
+    for over in lane_hypers:
+        merged = dict(defaults)
+        merged.update(over or {})
+        hypers.append(pol.make_hyper(**merged))
+    return LanePolicyServer(policy, params_per_lane, hypers)
 
 
 def make_server(name: str, params, *, num_clients: int = 50,

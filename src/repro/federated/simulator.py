@@ -56,6 +56,12 @@ ENGINES = ("cohort", "sequential")
 _FALLBACK_WARNED = set()
 
 
+def _timeline_seed(sim: "SimConfig") -> int:
+    """The seed driving the EVENT TIMELINE (latency, client sampling,
+    availability) — ``sim.seed`` unless ``sim.timeline_seed`` splits it."""
+    return sim.seed if sim.timeline_seed is None else sim.timeline_seed
+
+
 def _resolve_engine(sim: "SimConfig", cfg: ModelConfig) -> str:
     """Validate ``sim.engine`` and pick the engine that can train ``cfg``.
 
@@ -98,6 +104,22 @@ class SimConfig:
     availability_kind: str = "always"  # see latency.per_client_availability
     dropout_rate: float = 0.0          # per-dispatch failure rate when enabled
     seed: int = 0
+    # The seed is split along the sweep-lane contract: ``timeline_seed``
+    # drives everything that shapes the EVENT TIMELINE (latency draws,
+    # client sampling, availability) while ``seed`` keeps driving the
+    # model/data side (client batch shuffles). None = use ``seed`` for both
+    # (the historical behavior). run_sweep shares one timeline across all
+    # lanes and varies only the per-lane model/data seeds.
+    timeline_seed: Optional[int] = None
+    # Periodic full-fidelity snapshots (repro.checkpoint.store layout):
+    # every ``checkpoint_every`` virtual-time units the simulator persists
+    # the ServerState, both host RNG streams, the in-flight event heap and
+    # the metric/digest streams under ``checkpoint_dir``. ``resume=True``
+    # restores the latest snapshot and reproduces the remaining trajectory
+    # exactly. Single runs only (sweeps are not checkpointed).
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: float = 0.0
+    resume: bool = False
     eval_batches: int = 8
     eval_batch_size: int = 512
     engine: str = "cohort"             # "cohort" (batched) | "sequential"
@@ -151,8 +173,10 @@ class SimResult:
 # the value: the strong reference keeps the id valid for the cache's
 # lifetime, and the identity check guards against id reuse.
 _EVAL_CACHE: Dict[tuple, tuple] = {}
+_EVAL_LANES_CACHE: Dict[tuple, tuple] = {}
 _SKETCH_FN_CACHE: Dict[tuple, tuple] = {}
 _SKETCH_FLAT_CACHE: Dict[tuple, tuple] = {}
+_SKETCH_LANES_CACHE: Dict[tuple, tuple] = {}
 
 
 def _memo_identity(cache: Dict[tuple, tuple], key: tuple, anchor, build):
@@ -202,6 +226,42 @@ def _build_eval(cfg: ModelConfig, test_ds, sim: SimConfig):
 
     def evaluate(params) -> float:
         return float(np.mean([float(acc1(params, b)) for b in batches]))
+
+    return evaluate
+
+
+def _make_eval_lanes(cfg: ModelConfig, test_ds, sim: SimConfig,
+                     spec: tu.FlatSpec):
+    fam = registry.get_family(cfg)
+    return _memo_identity(
+        _EVAL_LANES_CACHE,
+        (cfg, sim.eval_batches, sim.eval_batch_size, fam, spec),
+        test_ds, lambda: _build_eval_lanes(cfg, test_ds, sim, spec))
+
+
+def _build_eval_lanes(cfg: ModelConfig, test_ds, sim: SimConfig,
+                      spec: tu.FlatSpec):
+    """Lane-batched evaluation: (S, d) flat lane models -> (S,) accuracies,
+    one vmapped call per eval batch. Same RandomState(1234) batch draw as
+    ``_build_eval``, so a lane's accuracy equals the standalone run's."""
+    from repro.common.sharding import SINGLE_DEVICE_RULES as R
+
+    fam = registry.get_family(cfg)
+    rng = np.random.RandomState(1234)
+    n = len(test_ds)
+    bs = min(sim.eval_batch_size, n)
+    idxs = [rng.choice(n, size=bs, replace=False)
+            for _ in range(sim.eval_batches)]
+    batches = [fam.batch_fn(test_ds.x[ix], test_ds.y[ix]) for ix in idxs]
+
+    acc1 = jax.jit(jax.vmap(
+        lambda vec, batch: fam.eval_accuracy(spec.unflatten(vec), batch,
+                                             cfg, R),
+        in_axes=(0, None)))
+
+    def evaluate(flat_stack) -> np.ndarray:
+        return np.mean([np.asarray(acc1(flat_stack, b)) for b in batches],
+                       axis=0)
 
     return evaluate
 
@@ -261,6 +321,41 @@ def _build_sketch_fn_flat(cfg: ModelConfig, calib_batch: dict,
     return fn
 
 
+def make_sketch_fn_lanes(cfg: ModelConfig, calib_batch: dict,
+                         psa_cfg: psa_lib.PSAConfig, spec: tu.FlatSpec):
+    return _memo_identity(
+        _SKETCH_LANES_CACHE, (cfg, psa_cfg, spec), calib_batch,
+        lambda: _build_sketch_fn_lanes(cfg, calib_batch, psa_cfg, spec))
+
+
+def _build_sketch_fn_lanes(cfg: ModelConfig, calib_batch: dict,
+                           psa_cfg: psa_lib.PSAConfig, spec: tu.FlatSpec):
+    """Lane-batched client sketches: (S, B, d) -> (S, B, k) with one nested
+    vmap call per wave, member axis bucketed like the engine."""
+    calib = {k: jnp.asarray(v) for k, v in calib_batch.items()}
+    from repro.common.sharding import SINGLE_DEVICE_RULES as R
+
+    def loss(params, batch):
+        return model_lib.loss_fn(params, batch, cfg, R)
+
+    batched = jax.jit(jax.vmap(jax.vmap(
+        lambda vec: psa_lib.client_sketch(loss, spec.unflatten(vec), calib,
+                                          psa_cfg))))
+    from repro.federated.cohort import bucket_size
+    data_kind = registry.get_family(cfg).data_kind
+
+    def fn(w_stack: jnp.ndarray) -> jnp.ndarray:
+        S, B = int(w_stack.shape[0]), int(w_stack.shape[1])
+        Bp = bucket_size(B, data_kind)
+        if Bp > B:
+            w_stack = jnp.concatenate(
+                [w_stack, jnp.zeros((S, Bp - B, w_stack.shape[2]),
+                                    w_stack.dtype)], axis=1)
+        return batched(w_stack)[:, :B]
+
+    return fn
+
+
 # Trajectory digest: one (||w||_2, probe·w) pair per applied receive — a
 # 2-float fingerprint of the full (d,) global vector that any execution path
 # (sequential, cohort, sharded) can be compared on within float tolerance.
@@ -283,6 +378,140 @@ def make_digest_fn(d: int) -> Callable:
 
         _DIGEST_FN_CACHE[d] = fn
     return fn
+
+
+# ---------------------------------------------------------------------------
+# Simulator checkpointing (SimConfig.checkpoint_dir / checkpoint_every)
+# ---------------------------------------------------------------------------
+# A snapshot is taken at wave boundaries (heap complete, all receives
+# applied): the ServerState leaves, both host RNG streams (dispatch +
+# latency jitter), the in-flight events with their dispatch snapshots
+# materialized to one (n, d) stack, and the metric/digest/receive-log
+# streams — enough to restore mid-run and reproduce the REMAINING digest
+# stream exactly. ``server.log`` (the policy's rendered per-update log) is
+# the one stream NOT persisted: a resumed run's copy covers only the
+# post-resume segment.
+
+def _rng_pack(rng: np.random.RandomState) -> dict:
+    kind, keys, pos, has_gauss, cached = rng.get_state()
+    assert kind == "MT19937"
+    return {"keys": np.asarray(keys, np.uint32),
+            "pos": np.int64(pos), "has_gauss": np.int64(has_gauss),
+            "cached": np.float64(cached)}
+
+
+def _rng_unpack(rng: np.random.RandomState, packed: dict) -> None:
+    rng.set_state(("MT19937", np.asarray(packed["keys"], np.uint32),
+                   int(packed["pos"]), int(packed["has_gauss"]),
+                   float(packed["cached"])))
+
+
+def _event_snapshot_vec(ev: "_Event", spec: tu.FlatSpec) -> np.ndarray:
+    """Materialize one in-flight event's dispatch snapshot as a flat (d,)
+    row (resolving cohort-engine ``(source, row)`` references and
+    flattening sequential-engine pytrees)."""
+    s = ev.snapshot
+    if isinstance(s, tuple):
+        return np.asarray(s[0][s[1]])
+    if isinstance(s, jnp.ndarray) and s.ndim == 1:
+        return np.asarray(s)
+    return np.asarray(spec.flatten(s))
+
+
+def _ckpt_save(sim: "SimConfig", server, rng, latency, heap,
+               result: "SimResult", t: float, next_eval: float,
+               seq: int) -> str:
+    from repro.checkpoint import store
+    spec = server.policy.spec
+    events = sorted(heap)
+    tree = {
+        "server": {f"{i:04d}": np.asarray(x) for i, x in
+                   enumerate(jax.tree_util.tree_leaves(server.state))},
+        "events": {
+            "t_done": np.asarray([e.t_done for e in events], np.float64),
+            "seq": np.asarray([e.seq for e in events], np.int64),
+            "cid": np.asarray([e.cid for e in events], np.int64),
+            "version": np.asarray([e.version for e in events], np.int64),
+            "ok": np.asarray([e.ok for e in events], bool),
+            "snapshots": np.stack([_event_snapshot_vec(e, spec)
+                                   for e in events]),
+        },
+        "rng": _rng_pack(rng),
+        "lat_rng": _rng_pack(latency.rng),
+        "counters": np.asarray(
+            [t, next_eval, seq, result.dispatches, result.launched,
+             result.dropped, result.cohorts, server.version], np.float64),
+        "times": np.asarray(result.times, np.float64),
+        "accuracies": np.asarray(result.accuracies, np.float64),
+        "digests": np.asarray(result.digests, np.float64).reshape(-1, 2),
+        "receive_log": {
+            "t": np.asarray([r["t"] for r in result.receive_log], np.float64),
+            "tau": np.asarray([r["tau"] for r in result.receive_log],
+                              np.int64),
+            "client": np.asarray([r["client"] for r in result.receive_log],
+                                 np.int64),
+        },
+    }
+    return store.save_pytree(tree, sim.checkpoint_dir, step=result.dispatches)
+
+
+def _ckpt_like(server) -> dict:
+    """A structure template for ``store.load_pytree`` (shapes are ignored by
+    the restore — only the tree structure and leaf names must match)."""
+    z = np.zeros((0,))
+    return {
+        "server": {f"{i:04d}": z for i in
+                   range(len(jax.tree_util.tree_leaves(server.state)))},
+        "events": {k: z for k in ("t_done", "seq", "cid", "version", "ok",
+                                  "snapshots")},
+        "rng": {k: z for k in ("keys", "pos", "has_gauss", "cached")},
+        "lat_rng": {k: z for k in ("keys", "pos", "has_gauss", "cached")},
+        "counters": z, "times": z, "accuracies": z, "digests": z,
+        "receive_log": {k: z for k in ("t", "tau", "client")},
+    }
+
+
+def _ckpt_restore(sim: "SimConfig", server, rng, latency, heap,
+                  result: "SimResult", batched: bool):
+    """Restore the latest snapshot under ``sim.checkpoint_dir`` into the
+    live run, returning ``(t, next_eval, seq)`` — or None when there is no
+    snapshot to resume from (the run then starts fresh)."""
+    from repro.checkpoint import store
+    step = store.latest_step(sim.checkpoint_dir)
+    if step is None:
+        return None
+    tree = store.load_pytree(sim.checkpoint_dir, _ckpt_like(server), step)
+    treedef = jax.tree_util.tree_structure(server.state)
+    leaves = [jnp.asarray(tree["server"][f"{i:04d}"])
+              for i in range(treedef.num_leaves)]
+    server.state = jax.tree_util.tree_unflatten(treedef, leaves)
+    _rng_unpack(rng, tree["rng"])
+    _rng_unpack(latency.rng, tree["lat_rng"])
+    (t, next_eval, seq, dispatches, launched, dropped, cohorts,
+     version) = (float(v) for v in tree["counters"])
+    server._version = int(version)
+    ev = tree["events"]
+    snaps = jnp.asarray(ev["snapshots"], jnp.float32)
+    unflatten = (None if batched
+                 else tu.jit_unflatten(server.policy.spec))
+    heap.clear()
+    for i in range(len(ev["seq"])):
+        snap = (snaps, i) if batched else unflatten(snaps[i])
+        heapq.heappush(heap, _Event(
+            float(ev["t_done"][i]), int(ev["seq"][i]), int(ev["cid"][i]),
+            snap, int(ev["version"][i]), bool(ev["ok"][i])))
+    result.dispatches = int(dispatches)
+    result.launched = int(launched)
+    result.dropped = int(dropped)
+    result.cohorts = int(cohorts)
+    result.times = [float(x) for x in tree["times"]]
+    result.accuracies = [float(x) for x in tree["accuracies"]]
+    result.digests = [list(row) for row in tree["digests"]]
+    rl = tree["receive_log"]
+    result.receive_log = [
+        {"t": float(rl["t"][i]), "tau": int(rl["tau"][i]),
+         "client": int(rl["client"][i])} for i in range(len(rl["t"]))]
+    return float(t), float(next_eval), int(seq)
 
 
 class _Event(NamedTuple):
@@ -333,6 +562,39 @@ def _gather_snapshots(snaps) -> jnp.ndarray:
     return out
 
 
+def _gather_snapshots_lanes(snaps) -> jnp.ndarray:
+    """Lane-stacked ``_gather_snapshots``: entries are plain ``(S, d)``
+    stacks (grouped by identity) or ``(source (S, n, d), row)`` references
+    into a previous flush's post-receive sequence. Returns ``(S, B, d)``."""
+    groups: dict = {}
+    order = []
+    for pos, s in enumerate(snaps):
+        src, row = s if isinstance(s, tuple) else (s, None)
+        g = groups.get(id(src))
+        if g is None:
+            g = (src, [], [])
+            groups[id(src)] = g
+            order.append(g)
+        g[1].append(row)
+        g[2].append(pos)
+    parts, positions = [], []
+    for src, rows, poss in order:
+        if rows[0] is None:
+            parts.append(jnp.broadcast_to(
+                src[:, None, :], (src.shape[0], len(poss), src.shape[1])))
+        elif len(rows) == 1:
+            parts.append(src[:, rows[0]][:, None])
+        else:
+            parts.append(src[:, jnp.asarray(np.asarray(rows, np.int32))])
+        positions.extend(poss)
+    out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if positions != list(range(len(snaps))):
+        inv = np.empty(len(snaps), np.int32)
+        inv[np.asarray(positions)] = np.arange(len(snaps), dtype=np.int32)
+        out = out[:, jnp.asarray(inv)]
+    return out
+
+
 def run_async(server_name: str, cfg: ModelConfig, init_params,
               client_datasets: List[ClientDataset], test_ds,
               sim: SimConfig, *, psa_cfg: Optional[psa_lib.PSAConfig] = None,
@@ -342,12 +604,13 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
     """Run one asynchronous algorithm to the virtual-time horizon."""
     engine = _resolve_engine(sim, cfg)
     batched = engine == "cohort"
-    rng = np.random.RandomState(sim.seed)
+    tseed = _timeline_seed(sim)
+    rng = np.random.RandomState(tseed)
     latency, lat_means = per_client_latency(
         sim.latency_kind, sim.latency_lo, sim.latency_hi, sim.num_clients,
-        sim.seed)
+        tseed)
     avail = per_client_availability(sim.availability_kind, sim.dropout_rate,
-                                    sim.num_clients, sim.seed,
+                                    sim.num_clients, tseed,
                                     latency_means=lat_means)
     use_avail = sim.availability_kind != "always" and sim.dropout_rate > 0.0
     sketch_fn = None
@@ -383,18 +646,40 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
         seq += 1
         result.launched += 1
 
-    for _ in range(concurrency):
-        dispatch(0.0)
+    t0 = next_eval0 = 0.0
+    resumed = None
+    if sim.checkpoint_dir and sim.resume:
+        resumed = _ckpt_restore(sim, server, rng, latency, heap, result,
+                                batched)
+    if resumed is None:
+        for _ in range(concurrency):
+            dispatch(0.0)
+    else:
+        t0, next_eval0, seq = resumed
+
+    ckpt = None
+    if sim.checkpoint_dir and sim.checkpoint_every > 0:
+        nxt = [(np.floor(t0 / sim.checkpoint_every) + 1)
+               * sim.checkpoint_every]
+
+        def ckpt(heap_, t_, next_eval_):
+            if t_ < nxt[0]:
+                return
+            _ckpt_save(sim, server, rng, latency, heap_, result, t_,
+                       next_eval_, seq)
+            while nxt[0] <= t_:
+                nxt[0] += sim.checkpoint_every
 
     if batched:
         t = _drain_cohort(server, cfg, init_params, client_datasets, sim,
                           dispatch, heap, evaluate, result, data_sizes,
                           align, psa_cfg, calib_batch, receive_hook,
-                          digest_fn)
+                          digest_fn, t0=t0, next_eval0=next_eval0, ckpt=ckpt)
     else:
         t = _drain_sequential(server, cfg, client_datasets, sim, dispatch,
                               heap, evaluate, result, data_sizes, align,
-                              sketch_fn, receive_hook, digest_fn)
+                              sketch_fn, receive_hook, digest_fn,
+                              t0=t0, next_eval0=next_eval0, ckpt=ckpt)
 
     result.final_accuracy = evaluate(server.params)
     result.times.append(min(t, sim.horizon))
@@ -406,11 +691,15 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
 
 def _drain_sequential(server, cfg, client_datasets, sim: SimConfig, dispatch,
                       heap, evaluate, result: SimResult, data_sizes, align,
-                      sketch_fn, receive_hook, digest_fn=None) -> float:
+                      sketch_fn, receive_hook, digest_fn=None, *,
+                      t0: float = 0.0, next_eval0: float = 0.0,
+                      ckpt=None) -> float:
     """Legacy reference loop: one local_update per completion (oracle)."""
-    next_eval = 0.0
-    t = 0.0
+    next_eval = next_eval0
+    t = t0
     while heap and t < sim.horizon:
+        if ckpt is not None:
+            ckpt(heap, t, next_eval)
         ev = heapq.heappop(heap)
         t = ev.t_done
         if t > sim.horizon:
@@ -451,7 +740,8 @@ def _drain_sequential(server, cfg, client_datasets, sim: SimConfig, dispatch,
 def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
                   dispatch, heap, evaluate, result: SimResult, data_sizes,
                   align, psa_cfg, calib_batch, receive_hook,
-                  digest_fn=None) -> float:
+                  digest_fn=None, *, t0: float = 0.0,
+                  next_eval0: float = 0.0, ckpt=None) -> float:
     """Batched drain: train completion waves as single device calls.
 
     A wave is the maximal heap prefix with ``t_done < t_first + latency_lo``
@@ -472,9 +762,11 @@ def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
         sketch_flat = make_sketch_fn_flat(cfg, calib_batch, psa_cfg, spec)
     unflatten = tu.jit_unflatten(spec) if receive_hook is not None else None
 
-    next_eval = 0.0
-    t = 0.0
+    next_eval = next_eval0
+    t = t0
     while heap and t < sim.horizon:
+        if ckpt is not None:
+            ckpt(heap, t, next_eval)
         first = heapq.heappop(heap)
         if first.t_done > sim.horizon:
             t = first.t_done       # mirror the sequential pop-then-break
@@ -578,18 +870,315 @@ def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
     return t
 
 
+# ---------------------------------------------------------------------------
+# Fleet sweep engine: S experiment lanes as ONE batched simulation
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SweepConfig:
+    """S experiment variants ("lanes") of one batched simulation.
+
+    All lanes share one event timeline (``SimConfig.timeline_seed``, falling
+    back to ``SimConfig.seed``): latency draws, client sampling, dropout,
+    wave boundaries and version bookkeeping are identical across lanes, so
+    the whole grid trains and ingests through lane-vmapped compiled calls.
+    What may vary per lane:
+
+    * ``model_seeds`` — per-lane model-init seeds (``init_params`` is used
+      for every lane when None),
+    * ``data_seeds`` — per-lane client batch-shuffle seeds (``SimConfig
+      .seed`` for every lane when None),
+    * ``policy_params`` — per-lane dicts of timeline-preserving policy
+      hyperparameters (``federated.policies.PolicyParams`` field names:
+      alpha, a, server_lr, beta, gamma, delta, eps, use_thermometer).
+
+    Shape-determining parameters (buffer_size, queue_len, sketch_k,
+    num_clients) and the client sketch program (use_sensitivity) are
+    structural: lanes must share them (pass via psa_cfg/server_kwargs).
+    """
+    num_lanes: Optional[int] = None
+    model_seeds: Optional[List[int]] = None
+    data_seeds: Optional[List[int]] = None
+    policy_params: Optional[List[Optional[dict]]] = None
+
+    def resolve(self, base_seed: int):
+        given = [x for x in (self.model_seeds, self.data_seeds,
+                             self.policy_params) if x is not None]
+        lens = {len(x) for x in given}
+        if self.num_lanes is not None:
+            lens.add(int(self.num_lanes))
+        if len(lens) > 1:
+            raise ValueError(
+                f"inconsistent lane counts in SweepConfig: {sorted(lens)}")
+        S = lens.pop() if lens else 1
+        if S < 1:
+            raise ValueError("a sweep needs at least one lane")
+        data_seeds = (list(self.data_seeds) if self.data_seeds is not None
+                      else [base_seed] * S)
+        hypers = (list(self.policy_params)
+                  if self.policy_params is not None else [None] * S)
+        model_seeds = (list(self.model_seeds)
+                       if self.model_seeds is not None else None)
+        return S, model_seeds, data_seeds, hypers
+
+
+@dataclass
+class SweepResult:
+    """A batched ``SimResult``: shared timeline counters + per-lane streams.
+
+    ``lane_accuracies[s]`` is lane s's learning curve over the shared
+    ``times`` grid; ``digests[s]`` its per-receive trajectory digest stream
+    (when ``record_trajectory``). ``lane(s)`` views one lane as a plain
+    ``SimResult`` for code that consumes single runs."""
+    num_lanes: int = 1
+    times: List[float] = field(default_factory=list)
+    lane_accuracies: List[List[float]] = field(default_factory=list)
+    final_accuracy: List[float] = field(default_factory=list)
+    versions: int = 0
+    dispatches: int = 0
+    launched: int = 0
+    dropped: int = 0
+    cohorts: int = 0
+    engine: str = "cohort"
+    receive_log: List[dict] = field(default_factory=list)
+    digests: List[List[List[float]]] = field(default_factory=list)
+
+    def lane(self, s: int) -> SimResult:
+        return SimResult(
+            times=list(self.times), accuracies=list(self.lane_accuracies[s]),
+            final_accuracy=self.final_accuracy[s], versions=self.versions,
+            dispatches=self.dispatches, launched=self.launched,
+            dropped=self.dropped, cohorts=self.cohorts, engine=self.engine,
+            receive_log=list(self.receive_log),
+            digests=[list(d) for d in self.digests[s]])
+
+    @property
+    def aulc(self) -> List[float]:
+        return [self.lane(s).aulc for s in range(self.num_lanes)]
+
+    def accuracy_mean_std(self):
+        a = np.asarray(self.final_accuracy, np.float64)
+        return float(a.mean()), float(a.std())
+
+
+def run_sweep(server_name: str, cfg: ModelConfig, init_params,
+              client_datasets: List[ClientDataset], test_ds,
+              sim: SimConfig, sweep: SweepConfig, *,
+              psa_cfg: Optional[psa_lib.PSAConfig] = None,
+              calib_batch: Optional[dict] = None,
+              server_kwargs: Optional[dict] = None) -> SweepResult:
+    """Run S variants of one async algorithm as ONE batched simulation.
+
+    One host event heap drives every lane (see ``SweepConfig``); per wave
+    the cohort engine trains an ``(S, B, d)`` snapshot stack in one compiled
+    call (``CohortEngine.sweep_update``) and the lane-stacked server ingests
+    it with one vmapped scan (``servers.LanePolicyServer``), so the whole
+    seed x hyperparameter grid pays the per-dispatch overhead once instead
+    of S times. Lane s reproduces the standalone run with
+    ``SimConfig(seed=data_seeds[s], timeline_seed=<shared>)``, that lane's
+    init params, and its hyper overrides, within float tolerance
+    (``tests/test_sweep.py`` pins this).
+    """
+    if server_name == "fedavg":
+        raise ValueError("run_sweep batches the async policies; run the "
+                         "synchronous fedavg per seed instead")
+    if sim.mesh is not None:
+        raise ValueError("run_sweep is single-device; drop SimConfig.mesh")
+    if sim.checkpoint_dir:
+        raise ValueError("checkpointing supports single runs, not sweeps")
+    engine = _resolve_engine(sim, cfg)
+    if engine != "cohort":
+        raise ValueError(
+            "run_sweep requires the batched cohort engine (engine='cohort' "
+            "and a registered model family)")
+    S, model_seeds, data_seeds, lane_hypers = sweep.resolve(sim.seed)
+    if model_seeds is None:
+        params_lanes = [init_params] * S
+    else:
+        params_lanes = [model_lib.init_params(jax.random.PRNGKey(int(s)), cfg)
+                        for s in model_seeds]
+
+    tseed = _timeline_seed(sim)
+    rng = np.random.RandomState(tseed)
+    latency, lat_means = per_client_latency(
+        sim.latency_kind, sim.latency_lo, sim.latency_hi, sim.num_clients,
+        tseed)
+    avail = per_client_availability(sim.availability_kind, sim.dropout_rate,
+                                    sim.num_clients, tseed,
+                                    latency_means=lat_means)
+    use_avail = sim.availability_kind != "always" and sim.dropout_rate > 0.0
+    sketch_fn = None
+    if server_name == "fedpsa":
+        psa_cfg = psa_cfg or psa_lib.PSAConfig()
+        assert calib_batch is not None
+        sketch_fn = make_sketch_fn(cfg, calib_batch, psa_cfg)
+    server = servers_lib.make_lane_server(
+        server_name, params_lanes, lane_hypers, num_clients=sim.num_clients,
+        psa_cfg=psa_cfg, sketch_fn=sketch_fn, **(server_kwargs or {}))
+    align = server.client_align
+    spec = server.policy.spec
+    digest_fn = (make_digest_fn(spec.size) if sim.record_trajectory else None)
+
+    evaluate = _make_eval_lanes(cfg, test_ds, sim, spec)
+    result = SweepResult(num_lanes=S, engine="cohort",
+                         lane_accuracies=[[] for _ in range(S)],
+                         digests=[[] for _ in range(S)])
+    concurrency = max(1, int(round(sim.concurrency * sim.num_clients)))
+    heap: List[_Event] = []
+    seq = 0
+    data_sizes = np.array([len(d) for d in client_datasets], np.float64)
+
+    def dispatch(t: float, snap=None, version=None):
+        nonlocal seq
+        cid = int(rng.randint(sim.num_clients))
+        t_done = t + latency(cid)
+        ok = bool(rng.rand() < avail[cid]) if use_avail else True
+        if snap is None:
+            snap = server.flat_params          # (S, d) lane stack
+        if version is None:
+            version = server.version
+        heapq.heappush(heap, _Event(t_done, seq, cid, snap, version, ok))
+        seq += 1
+        result.launched += 1
+
+    for _ in range(concurrency):
+        dispatch(0.0)
+
+    t = _drain_sweep(server, cfg, params_lanes, client_datasets, sim,
+                     dispatch, heap, evaluate, result, data_sizes, align,
+                     psa_cfg, calib_batch, digest_fn, data_seeds)
+
+    final = evaluate(server.flat_params)
+    result.final_accuracy = [float(a) for a in final]
+    result.times.append(min(t, sim.horizon))
+    for s in range(S):
+        result.lane_accuracies[s].append(result.final_accuracy[s])
+    result.versions = server.version
+    return result
+
+
+def _drain_sweep(server, cfg, params_lanes, client_datasets, sim: SimConfig,
+                 dispatch, heap, evaluate, result: SweepResult, data_sizes,
+                 align, psa_cfg, calib_batch, digest_fn,
+                 data_seeds) -> float:
+    """The cohort drain, lane-stacked: identical wave selection and flush
+    ordering to ``_drain_cohort`` (the timeline is lane-invariant), with
+    every tensor growing a leading lane axis."""
+    S = server.num_lanes
+    spec = server.policy.spec
+    stacked = StackedClients.from_datasets(client_datasets)
+    engine = CohortEngine(cfg, stacked, spec, params_lanes[0],
+                          local_epochs=sim.local_epochs,
+                          batch_size=sim.batch_size, align=align)
+    sketch_lanes = None
+    if server.needs_sketch:
+        sketch_lanes = make_sketch_fn_lanes(cfg, calib_batch, psa_cfg, spec)
+
+    next_eval = 0.0
+    t = 0.0
+    while heap and t < sim.horizon:
+        first = heapq.heappop(heap)
+        if first.t_done > sim.horizon:
+            t = first.t_done
+            break
+        bound = first.t_done + sim.latency_lo
+        wave: List[_Event] = [first]
+        t_over = None
+        while heap and heap[0].t_done < bound and len(wave) < sim.max_cohort:
+            ev = heapq.heappop(heap)
+            if ev.t_done > sim.horizon:
+                t_over = ev.t_done
+                break
+            wave.append(ev)
+
+        ok_events = [ev for ev in wave if ev.ok]
+        deltas = w_stack = sketches = None
+        if ok_events:
+            d0 = result.dispatches
+            snapshots = _gather_snapshots_lanes(
+                [ev.snapshot for ev in ok_events])
+            cids = [ev.cid for ev in ok_events]
+            lrs = [sim.lr * (sim.lr_decay ** (d0 + r))
+                   for r in range(len(ok_events))]
+            seeds = np.asarray(
+                [[int(ds) * 100003 + (d0 + r)
+                  for r in range(len(ok_events))] for ds in data_seeds])
+            deltas, w_stack = engine.sweep_update(snapshots, cids, lrs, seeds)
+            if sketch_lanes is not None:
+                sketches = sketch_lanes(w_stack)
+            result.cohorts += 1
+
+        pending: List[_Event] = []
+        next_row = 0
+
+        def flush():
+            nonlocal next_row
+            if not pending:
+                return
+            ok = [ev for ev in pending if ev.ok]
+            r0, r1 = next_row, next_row + len(ok)
+            cur = server.flat_params       # (S, d) pre-flush stack
+            snaps = None
+            upd = np.zeros((0,), bool)
+            if ok:
+                upd, taus, snaps = server.receive_many(
+                    deltas[:, r0:r1], w_stack[:, r0:r1],
+                    [ev.cid for ev in ok],
+                    [float(data_sizes[ev.cid]) for ev in ok],
+                    [ev.version for ev in ok],
+                    None if sketches is None else sketches[:, r0:r1])
+                if digest_fn is not None:
+                    rows = np.asarray(snaps)           # (S, B, d) once
+                    for s in range(S):
+                        result.digests[s].extend(digest_fn(rows[s]).tolist())
+                for ev, tau in zip(ok, taus):
+                    result.receive_log.append(
+                        {"t": ev.t_done, "tau": tau, "client": ev.cid})
+                result.dispatches += len(ok)
+                next_row = r1
+            vcur = server.version - int(np.sum(upd))
+            oi = 0
+            for ev in pending:
+                if ev.ok:
+                    cur = (snaps, oi)
+                    vcur += int(upd[oi])
+                    oi += 1
+                else:
+                    result.dropped += 1
+                dispatch(ev.t_done, snap=cur, version=vcur)
+            pending.clear()
+
+        for ev in wave:
+            t = ev.t_done
+            if next_eval <= t:
+                flush()
+                while next_eval <= t:
+                    accs = evaluate(server.flat_params)
+                    result.times.append(next_eval)
+                    for s in range(S):
+                        result.lane_accuracies[s].append(float(accs[s]))
+                    next_eval += sim.eval_every
+            pending.append(ev)
+        flush()
+        if t_over is not None:
+            t = t_over
+            break
+    return t
+
+
 def run_fedavg(cfg: ModelConfig, init_params, client_datasets: List[ClientDataset],
                test_ds, sim: SimConfig, *, prox: float = 0.0) -> SimResult:
     """Synchronous FedAvg: per round sample 20% of clients, wait for the
     slowest, aggregate weighted by client data size. With the cohort engine
     the whole round trains as one device call and the global model stays a
     flat (d,) vector between rounds."""
-    rng = np.random.RandomState(sim.seed)
+    tseed = _timeline_seed(sim)
+    rng = np.random.RandomState(tseed)
     latency, lat_means = per_client_latency(
         sim.latency_kind, sim.latency_lo, sim.latency_hi, sim.num_clients,
-        sim.seed)
+        tseed)
     avail = per_client_availability(sim.availability_kind, sim.dropout_rate,
-                                    sim.num_clients, sim.seed,
+                                    sim.num_clients, tseed,
                                     latency_means=lat_means)
     use_avail = sim.availability_kind != "always" and sim.dropout_rate > 0.0
     evaluate = _make_eval(cfg, test_ds, sim)

@@ -12,6 +12,10 @@ token families (dense/ssm/moe/hybrid — e.g. ``--arch fed-lm-smoke``, or any
 assigned arch's ``-smoke`` reduction) train the federated LM fine-tuning
 scenario on a document-partitioned synthetic corpus. The full-scale configs
 are exercised by the dry-run, not by CPU training.
+
+``--sweep seeds=0,1,2`` (or ``--sweep alpha=0.3,0.6,0.9`` etc.) runs the
+variants as lanes of ONE batched simulation over a shared event timeline
+(``run_sweep``), printing per-lane and mean±std accuracy.
 """
 from __future__ import annotations
 
@@ -30,7 +34,8 @@ from repro.data import (ClientDataset, dirichlet_partition,
                         make_calibration_batch, make_classification,
                         make_lm_corpus, train_test_split)
 from repro.data.synthetic import SyntheticClassification
-from repro.federated import SimConfig, run_algorithm, ALGORITHMS
+from repro.federated import (SimConfig, SweepConfig, run_algorithm,
+                             run_sweep, ALGORITHMS)
 from repro.models import model as model_lib
 from repro.models import registry
 
@@ -125,6 +130,13 @@ def main():
                     help="shard the policy server (and train waves "
                          "data-parallel) over an N-device mesh; on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--sweep", default=None, metavar="SPEC",
+                    help="run S variants as ONE batched simulation "
+                         "(run_sweep; lanes share the event timeline). "
+                         "SPEC is either 'seeds=0,1,2' (per-lane model+"
+                         "shuffle seeds) or a policy hyperparameter grid "
+                         "like 'alpha=0.3,0.6,0.9' or "
+                         "'gamma=0.1,1,5' (PolicyParams field names)")
     ap.add_argument("--out", default="artifacts/runs")
     args = ap.parse_args()
 
@@ -142,14 +154,52 @@ def main():
                     seed=args.seed, engine=args.engine, mesh=mesh)
     psa = PSAConfig(buffer_size=args.buffer, queue_len=args.queue,
                     gamma=args.gamma, delta=args.delta, sketch_k=args.sketch_k)
-    t0 = time.time()
-    res = run_algorithm(args.alg, cfg, params, clients, test, sim,
-                        psa_cfg=psa, calib_batch=calib)
-    wall = time.time() - t0
     os.makedirs(args.out, exist_ok=True)
     name = f"{args.alg}_{args.model}_a{args.alpha}_{args.latency}{int(args.lat_hi)}_s{args.seed}"
     if args.mesh:
         name += f"_mesh{args.mesh}"
+
+    if args.sweep:
+        key, _, vals = args.sweep.partition("=")
+        if not vals:
+            raise SystemExit("--sweep wants 'seeds=...' or '<hyper>=v1,v2'")
+        if key == "seeds":
+            seeds = [int(v) for v in vals.split(",")]
+            sweep = SweepConfig(model_seeds=seeds, data_seeds=seeds)
+            lane_tags = [f"seed{s}" for s in seeds]
+        else:
+            grid = [float(v) for v in vals.split(",")]
+            sweep = SweepConfig(policy_params=[{key: v} for v in grid])
+            lane_tags = [f"{key}{v:g}" for v in grid]
+        t0 = time.time()
+        res = run_sweep(args.alg, cfg, params, clients, test, sim, sweep,
+                        psa_cfg=psa, calib_batch=calib)
+        wall = time.time() - t0
+        mean, std = res.accuracy_mean_std()
+        rec = {
+            "alg": args.alg, "model": args.model, "alpha": args.alpha,
+            "latency": [args.latency, args.lat_lo, args.lat_hi],
+            "sweep": args.sweep, "lanes": lane_tags,
+            "final_accuracy": res.final_accuracy, "aulc": res.aulc,
+            "final_accuracy_mean": mean, "final_accuracy_std": std,
+            "versions": res.versions, "dispatches": res.dispatches,
+            "times": res.times, "lane_accuracies": res.lane_accuracies,
+            "wall_s": round(wall, 1), "engine": res.engine,
+        }
+        name += f"_sweep-{key}{len(lane_tags)}"
+        path = os.path.join(args.out, name + ".json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        for tag, acc in zip(lane_tags, res.final_accuracy):
+            print(f"[train]   lane {tag}: final={acc:.4f}")
+        print(f"[train] {name}: mean={mean:.4f}±{std:.4f} ({wall:.0f}s, "
+              f"one batched simulation) -> {path}")
+        return
+
+    t0 = time.time()
+    res = run_algorithm(args.alg, cfg, params, clients, test, sim,
+                        psa_cfg=psa, calib_batch=calib)
+    wall = time.time() - t0
     rec = {
         "alg": args.alg, "model": args.model, "alpha": args.alpha,
         "latency": [args.latency, args.lat_lo, args.lat_hi],

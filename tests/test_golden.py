@@ -148,6 +148,47 @@ def test_golden_digests_are_committed():
         assert os.path.exists(_golden_path(name)), name
 
 
+# One timeline-preserving hyper override per policy — a lane that must
+# DIFFER from the default lane (proving per-lane hyper actually bites).
+SWEEP_HYPER = {
+    "fedasync": {"alpha": 0.3}, "fedbuff": {"server_lr": 0.7},
+    "fedpsa": {"server_lr": 0.5}, "ca2fl": {"server_lr": 0.6},
+    "fedfa": {"beta": 0.8}, "fedpac": {"server_lr": 0.8},
+    "asyncfeded": {"alpha": 0.4},
+}
+
+
+@pytest.mark.parametrize("name", POLICY_NAMES)
+def test_sweep_lane_matches_golden(world, name):
+    """The sweep case: lane 0 of a 3-lane ``run_sweep`` (default seeds and
+    hyperparameters, shared timeline) reproduces the checked-in golden
+    digest stream, while the hyper-varied and reshuffled lanes diverge from
+    it — lanes are independent simulations riding one compiled program."""
+    from repro.federated import SweepConfig, run_sweep
+
+    cfg, clients, test, calib, params = world
+    kw = {}
+    if name == "fedpsa":
+        kw = dict(psa_cfg=PSAConfig(**PSA), calib_batch=calib)
+    sweep = SweepConfig(data_seeds=[SIM["seed"], SIM["seed"], 1234],
+                        policy_params=[None, SWEEP_HYPER[name], None])
+    sim = SimConfig(engine="cohort", record_trajectory=True, **SIM)
+    res = run_sweep(name, cfg, params, clients, test, sim, sweep, **kw)
+    golden = _load(name)
+    want = np.asarray(golden["digests"])
+    got = np.asarray(res.digests[0])
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(res.final_accuracy[0],
+                               golden["final"]["final_accuracy"], atol=2e-3)
+    assert res.dispatches == golden["final"]["dispatches"]
+    assert res.launched == golden["final"]["launched"]
+    # the varied lanes must NOT reproduce the default trajectory
+    for s in (1, 2):
+        assert not np.allclose(np.asarray(res.digests[s]), want,
+                               rtol=RTOL, atol=ATOL), s
+
+
 # ---------------------------------------------------------------------------
 # Federated LM scenario golden (fed-lm-smoke, slow / LM tier)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,330 @@
+"""Fleet sweep engine: lane independence, permutation safety, resume.
+
+The lane contract (ARCHITECTURE.md "sweep-lane contract"): an S-lane
+``run_sweep`` is S independent simulations sharing one event timeline. These
+tests pin that down three ways:
+
+* *Lane parity* — every lane's per-receive digest stream equals the
+  standalone ``run_async`` with the same timeline seed, data seed, init
+  params and hyperparameters, at 1e-5 (bit-exact for the ring policies on
+  CPU, where the vmapped member program is the same op sequence).
+* *Permutation* — permuting the lane order permutes the results and nothing
+  else: no cross-lane talk through the stacked state or the vmapped calls.
+* *Checkpoint resume* — ``SimConfig.checkpoint_dir``/``checkpoint_every``
+  snapshots a single run mid-flight; resuming reproduces the remaining
+  digest stream of the uninterrupted run exactly.
+
+Deterministic cases always run; with ``hypothesis`` installed the parity
+invariant is additionally fuzzed over lane counts, seeds and hyper grids.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PSAConfig
+from repro.data import (ClientDataset, dirichlet_partition,
+                        make_calibration_batch, make_classification,
+                        train_test_split)
+from repro.federated import (SimConfig, SweepConfig, run_algorithm,
+                             run_sweep)
+from repro.models import model as M
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+NUM_CLIENTS = 6
+QUICK = dict(num_clients=NUM_CLIENTS, horizon=3_500.0, eval_every=1_750.0)
+
+# The lane contract tolerance. Immediate-mix policies (fedasync) come out
+# bit-exact on CPU; the ring policies' buffered einsum reassociates under
+# the lane vmap at ~5e-7 relative, well inside the 1e-5 contract.
+FLOAT_TOL = 1e-5
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("paper-synthetic-mlp")
+    full = make_classification(800, 10, 32, seed=0, class_sep=0.7)
+    train, test = train_test_split(full, 0.1)
+    parts = dirichlet_partition(train, NUM_CLIENTS, alpha=0.3, seed=0)
+    clients = [ClientDataset(train.subset(ix)) for ix in parts]
+    calib = make_calibration_batch(train, 64, "gaussian")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, clients, test, calib, params
+
+
+def _digest_close(a, b, tol):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape, (a.shape, b.shape)
+    if tol == 0.0:
+        np.testing.assert_array_equal(a, b)
+    else:
+        np.testing.assert_allclose(a, b, rtol=tol, atol=tol * 10)
+
+
+def _run_solo(world, alg, sim_kw, seed, init_seed=None, hyper=None, **kw):
+    cfg, clients, test, calib, params = world
+    if init_seed is not None:
+        params = M.init_params(jax.random.PRNGKey(init_seed), cfg)
+    sim = SimConfig(record_trajectory=True, seed=seed, **sim_kw)
+    if alg == "fedpsa":
+        kw.setdefault("psa_cfg", PSAConfig(queue_len=8))
+        kw.setdefault("calib_batch", calib)
+    if hyper:
+        kw.setdefault("server_kwargs", {}).update(
+            {k: v for k, v in hyper.items()})
+    return run_algorithm(alg, cfg, params, clients, test, sim, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Lane parity: lane k of a sweep == the standalone run it encodes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alg,hyper", [
+    ("fedbuff", {"server_lr": 0.7}),       # ring policy: bit-exact lanes
+    ("fedfa", {"beta": 0.8}),              # ring policy: bit-exact lanes
+    ("fedasync", {"alpha": 0.35}),
+])
+def test_lane_matches_standalone(world, alg, hyper):
+    """Each lane of a 3-lane sweep (default / hyper-varied / reshuffled)
+    reproduces the standalone run with the same timeline seed and that
+    lane's data seed + hyper overrides."""
+    cfg, clients, test, calib, params = world
+    tseed = 0
+    lanes = [dict(data_seed=0, hyper=None),
+             dict(data_seed=0, hyper=hyper),
+             dict(data_seed=11, hyper=None)]
+    sweep = SweepConfig(data_seeds=[l["data_seed"] for l in lanes],
+                        policy_params=[l["hyper"] for l in lanes])
+    res = run_sweep(alg, cfg, params, clients, test,
+                    SimConfig(record_trajectory=True, seed=tseed, **QUICK),
+                    sweep)
+    assert res.num_lanes == 3 and res.dispatches > 0
+    for s, lane in enumerate(lanes):
+        solo = _run_solo(
+            world, alg, dict(QUICK, timeline_seed=tseed),
+            seed=lane["data_seed"],
+            **({"server_kwargs": dict(lane["hyper"])} if lane["hyper"]
+               else {}))
+        assert solo.dispatches == res.dispatches      # shared timeline
+        assert solo.receive_log == res.receive_log
+        _digest_close(res.digests[s], solo.digests, FLOAT_TOL)
+        np.testing.assert_allclose(res.final_accuracy[s],
+                                   solo.final_accuracy, atol=1e-5)
+    # the varied lanes took genuinely different trajectories
+    assert not np.allclose(res.digests[0], res.digests[1])
+    assert not np.allclose(res.digests[0], res.digests[2])
+
+
+def test_fedpsa_lane_parity_including_ablation_lane(world):
+    """FedPSA lanes: per-lane gamma/delta AND a w/o-T ablation lane (the
+    use_thermometer switch is a traced hyper leaf) each match their
+    standalone equivalents."""
+    cfg, clients, test, calib, params = world
+    psa = PSAConfig(queue_len=8)
+    sweep = SweepConfig(policy_params=[
+        None, {"gamma": 0.5, "delta": 0.1}, {"use_thermometer": False}])
+    res = run_sweep("fedpsa", cfg, params, clients, test,
+                    SimConfig(record_trajectory=True, seed=0, **QUICK),
+                    sweep, psa_cfg=psa, calib_batch=calib)
+    solos = [
+        _run_solo(world, "fedpsa", QUICK, seed=0, psa_cfg=psa,
+                  calib_batch=calib),
+        _run_solo(world, "fedpsa", QUICK, seed=0,
+                  psa_cfg=PSAConfig(queue_len=8, gamma=0.5, delta=0.1),
+                  calib_batch=calib),
+        _run_solo(world, "fedpsa", QUICK, seed=0,
+                  psa_cfg=PSAConfig(queue_len=8, use_thermometer=False),
+                  calib_batch=calib),
+    ]
+    for s, solo in enumerate(solos):
+        _digest_close(res.digests[s], solo.digests, FLOAT_TOL)
+
+
+def test_model_seed_lanes(world):
+    """model_seeds inits each lane's model independently; the lane matches
+    the standalone run started from that init."""
+    cfg, clients, test, calib, params = world
+    sweep = SweepConfig(model_seeds=[0, 3])
+    res = run_sweep("fedasync", cfg, params, clients, test,
+                    SimConfig(record_trajectory=True, seed=0, **QUICK),
+                    sweep)
+    for s, init_seed in enumerate((0, 3)):
+        solo = _run_solo(world, "fedasync", QUICK, seed=0,
+                         init_seed=init_seed)
+        _digest_close(res.digests[s], solo.digests, FLOAT_TOL)
+    assert not np.allclose(res.digests[0], res.digests[1])
+
+
+# ---------------------------------------------------------------------------
+# Permutation: lane order is irrelevant
+# ---------------------------------------------------------------------------
+
+def test_permuting_lanes_permutes_results(world):
+    cfg, clients, test, calib, params = world
+    seeds = [0, 5, 9]
+    hypers = [None, {"alpha": 0.3}, {"alpha": 0.9}]
+    perm = [2, 0, 1]
+    sim = SimConfig(record_trajectory=True, seed=0, **QUICK)
+    base = run_sweep("fedasync", cfg, params, clients, test, sim,
+                     SweepConfig(data_seeds=seeds, policy_params=hypers))
+    shuf = run_sweep("fedasync", cfg, params, clients, test, sim,
+                     SweepConfig(data_seeds=[seeds[p] for p in perm],
+                                 policy_params=[hypers[p] for p in perm]))
+    assert base.times == shuf.times
+    for s, p in enumerate(perm):
+        _digest_close(shuf.digests[s], base.digests[p], FLOAT_TOL)
+        np.testing.assert_allclose(shuf.final_accuracy[s],
+                                   base.final_accuracy[p], atol=1e-6)
+        np.testing.assert_allclose(shuf.lane_accuracies[s],
+                                   base.lane_accuracies[p], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Sweep surface: validation + SimResult views
+# ---------------------------------------------------------------------------
+
+def test_sweep_config_validation(world):
+    cfg, clients, test, calib, params = world
+    sim = SimConfig(seed=0, **QUICK)
+    with pytest.raises(ValueError, match="lane counts"):
+        SweepConfig(data_seeds=[0, 1], policy_params=[None]).resolve(0)
+    with pytest.raises(ValueError, match="fedavg"):
+        run_sweep("fedavg", cfg, params, clients, test, sim, SweepConfig())
+    with pytest.raises(ValueError, match="buffer_size"):
+        run_sweep("fedbuff", cfg, params, clients, test, sim,
+                  SweepConfig(policy_params=[{"buffer_size": 9}]))
+    with pytest.raises(ValueError, match="cohort"):
+        run_sweep("fedasync", cfg, params, clients, test,
+                  SimConfig(seed=0, engine="sequential", **QUICK),
+                  SweepConfig())
+
+
+def test_lane_view_is_a_sim_result(world):
+    cfg, clients, test, calib, params = world
+    res = run_sweep("fedbuff", cfg, params, clients, test,
+                    SimConfig(record_trajectory=True, seed=0, **QUICK),
+                    SweepConfig(data_seeds=[0, 4]))
+    lane = res.lane(1)
+    assert lane.final_accuracy == res.final_accuracy[1]
+    assert lane.times == res.times
+    assert lane.dispatches == res.dispatches
+    assert 0.0 <= lane.aulc <= 1.0
+    mean, std = res.accuracy_mean_std()
+    np.testing.assert_allclose(mean, np.mean(res.final_accuracy))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume (SimConfig.checkpoint_dir wiring)
+# ---------------------------------------------------------------------------
+
+def _prune_to_mid_run(ckdir, total_dispatches):
+    """Drop snapshots at/after the run's end so ``resume=True`` (which picks
+    the latest) restarts from a genuinely mid-run state."""
+    import shutil
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckdir))
+    mid = [s for s in steps if 0 < s < total_dispatches]
+    assert mid, steps
+    for s in steps:
+        if s > mid[-1]:
+            shutil.rmtree(os.path.join(ckdir, f"step_{s:08d}"))
+    return mid
+
+@pytest.mark.parametrize("engine", ("cohort", "sequential"))
+def test_checkpoint_resume_reproduces_digest_stream(world, engine, tmp_path):
+    """A run checkpointed mid-flight, then restarted with ``resume=True``
+    from its latest snapshot, reproduces the uninterrupted run's remaining
+    digest stream and final metrics exactly."""
+    cfg, clients, test, calib, params = world
+    kw = dict(QUICK, record_trajectory=True, seed=0, engine=engine)
+    base = run_algorithm("fedbuff", cfg, params, clients, test,
+                         SimConfig(**kw))
+    ckdir = str(tmp_path / engine)
+    # checkpointing must not perturb the run it snapshots
+    ck = run_algorithm("fedbuff", cfg, params, clients, test,
+                       SimConfig(checkpoint_dir=ckdir,
+                                 checkpoint_every=1_000.0, **kw))
+    np.testing.assert_array_equal(np.asarray(ck.digests),
+                                  np.asarray(base.digests))
+    from repro.checkpoint import store
+    steps = _prune_to_mid_run(ckdir, base.dispatches)
+    assert len(steps) >= 2, steps
+    assert 0 < store.latest_step(ckdir) < base.dispatches  # genuinely mid-run
+    res = run_algorithm("fedbuff", cfg, params, clients, test,
+                        SimConfig(checkpoint_dir=ckdir,
+                                  checkpoint_every=1_000.0, resume=True,
+                                  **kw))
+    np.testing.assert_array_equal(np.asarray(res.digests),
+                                  np.asarray(base.digests))
+    assert res.dispatches == base.dispatches
+    assert res.launched == base.launched
+    assert res.times == base.times
+    assert res.receive_log == base.receive_log   # incl. pre-resume entries
+    np.testing.assert_allclose(res.accuracies, base.accuracies, atol=1e-6)
+    np.testing.assert_allclose(res.final_accuracy, base.final_accuracy,
+                               atol=1e-6)
+
+
+def test_checkpoint_resume_fedpsa_state(world, tmp_path):
+    """FedPSA's full sub-state (ring buffer, kappas, thermometer queue,
+    global sketch) survives the round-trip: the resumed trajectory equals
+    the uninterrupted one."""
+    cfg, clients, test, calib, params = world
+    psa = PSAConfig(queue_len=8)
+    kw = dict(QUICK, record_trajectory=True, seed=0)
+    base = run_algorithm("fedpsa", cfg, params, clients, test,
+                         SimConfig(**kw), psa_cfg=psa, calib_batch=calib)
+    ckdir = str(tmp_path / "psa")
+    run_algorithm("fedpsa", cfg, params, clients, test,
+                  SimConfig(checkpoint_dir=ckdir, checkpoint_every=1_200.0,
+                            **kw), psa_cfg=psa, calib_batch=calib)
+    _prune_to_mid_run(ckdir, base.dispatches)
+    res = run_algorithm("fedpsa", cfg, params, clients, test,
+                        SimConfig(checkpoint_dir=ckdir,
+                                  checkpoint_every=1_200.0, resume=True,
+                                  **kw), psa_cfg=psa, calib_batch=calib)
+    np.testing.assert_allclose(np.asarray(res.digests),
+                               np.asarray(base.digests), rtol=1e-6,
+                               atol=1e-5)
+    assert res.dispatches == base.dispatches
+
+
+# ---------------------------------------------------------------------------
+# Fuzzed lane parity (hypothesis tier)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=4, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.function_scoped_fixture])
+    @given(
+        tseed=st.integers(0, 3),
+        data_seeds=st.lists(st.integers(0, 50), min_size=2, max_size=4),
+        lane=st.integers(0, 3),
+        alpha=st.floats(0.2, 0.9),
+    )
+    def test_fuzzed_lane_parity(world, tseed, data_seeds, lane, alpha):
+        """Any lane of any (timeline seed x data seeds x alpha grid) sweep
+        equals its standalone run: digest streams at FLOAT_TOL, shared
+        counters exactly."""
+        cfg, clients, test, calib, params = world
+        lane = lane % len(data_seeds)
+        hypers = [None] + [{"alpha": round(alpha, 3)}] * (len(data_seeds) - 1)
+        sweep = SweepConfig(data_seeds=data_seeds, policy_params=hypers)
+        res = run_sweep(
+            "fedasync", cfg, params, clients, test,
+            SimConfig(record_trajectory=True, seed=tseed, **QUICK), sweep)
+        solo = _run_solo(
+            world, "fedasync", dict(QUICK, timeline_seed=tseed),
+            seed=data_seeds[lane],
+            **({"server_kwargs": dict(hypers[lane])} if hypers[lane]
+               else {}))
+        assert solo.dispatches == res.dispatches
+        _digest_close(res.digests[lane], solo.digests, FLOAT_TOL)
