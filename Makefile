@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-multidevice golden golden-regen golden-check \
-	bench-smoke bench bench-sim bench-sweep
+	bench-smoke bench bench-sim bench-sweep bench-pop
 
 test:
 	$(PY) -m pytest -x -q
@@ -57,6 +57,14 @@ bench-sim:
 # Narrow with SWEEP_BENCH_LANES=4 for a smoke run.
 bench-sweep:
 	$(PY) -m benchmarks.sweep_throughput
+
+# Population-scale dispatch cost: C=5k vs C=100k lazy populations through
+# the streaming cohort engine at a fixed in-flight count; writes
+# artifacts/bench/BENCH_population.json with peak host RSS per cell
+# (gates: per-dispatch <= 1.3x across cells, RSS set by shard geometry not
+# C). Narrow with POP_BENCH_PRESETS=pop-smoke for the CI cell.
+bench-pop:
+	$(PY) -m benchmarks.population_throughput
 
 bench:
 	$(PY) -m benchmarks.run

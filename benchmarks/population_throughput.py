@@ -1,0 +1,212 @@
+"""Population-scale dispatch cost: streaming slabs at C=5k vs C=100k.
+
+The claim under test (ISSUE 7 / ROADMAP "million-client simulator"): with
+the vectorized timeline + chunked/streaming client slabs, per-dispatch wall
+cost is set by the WAVE (how many clients train at once), not by the
+population size, and resident memory is set by the shard-cache geometry,
+not by C. Each cell dispatches from a lazy ``SyntheticPopulation`` through
+the streaming cohort engine with the SAME absolute in-flight count (1024
+clients training at once), so C=5k and C=100k run comparable device waves
+and their per-dispatch costs are directly comparable.
+
+Per cell we run one full-length warmup (jit caches, shard cache, eval) and
+one timed run while a sampler thread tracks peak host RSS. Writes
+artifacts/bench/BENCH_population.json.
+
+Acceptance gates (exit 1 with a WARNING when violated):
+  * per-dispatch wall cost at C=100k <= 1.3x the C=5k cell;
+  * peak RSS of the largest cell <= smallest cell's peak +
+    POP_BENCH_RSS_MARGIN_MB (default 600 MB — far below the ~1.6 GB a
+    monolithic C=100k slab would add, generous to allocator noise).
+
+Override the cells with POP_BENCH_PRESETS (comma list of
+``repro.configs.population`` preset names; CI runs ``pop-smoke``, a tiny C
+forced through a fragmented multi-shard cache, gating only RSS).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import threading
+import time
+
+import jax
+
+from repro.configs import get_population_preset
+from repro.data.loader import ClientSlabStore
+from repro.federated import SimConfig, run_async
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from benchmarks import common
+
+LATENCY_LO, LATENCY_HI = 100.0, 500.0
+LOCAL_EPOCHS = 2
+BATCH_SIZE = 32
+TARGET_DISPATCHES = 200   # receives per timed run, roughly, at every C
+DEFAULT_PRESETS = "pop-5k,pop-100k"
+GATE_RATIO = 1.3
+GATE_CELLS = ("pop-5k", "pop-100k")
+
+
+class RssSampler:
+    """Peak resident set size (bytes) over a timed region, sampled from
+    /proc/self/statm — per-cell, unlike the monotonic ru_maxrss."""
+
+    def __init__(self, interval: float = 0.02):
+        self.interval = interval
+        self.page = os.sysconf("SC_PAGE_SIZE")
+        self.peak = 0
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+
+    def _read(self) -> int:
+        try:
+            with open("/proc/self/statm") as f:
+                return int(f.read().split()[1]) * self.page
+        except OSError:          # non-linux: no per-cell sampling
+            return 0
+
+    def _loop(self):
+        while not self._stop.is_set():
+            self.peak = max(self.peak, self._read())
+            self._stop.wait(self.interval)
+
+    def __enter__(self):
+        self.peak = self._read()
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._thread.join()
+        self.peak = max(self.peak, self._read())
+        return False
+
+
+def model_config(preset) -> ModelConfig:
+    """The paper MLP sized to the preset's feature dim."""
+    from repro.configs import get_config
+    cfg = get_config("paper-synthetic-mlp")
+    assert cfg.input_hw[0] == preset.dim and cfg.num_classes == preset.num_classes
+    return cfg
+
+
+def horizon_for(n_inflight: int, target: int) -> float:
+    """Completions arrive from t=latency_lo at ~n_inflight/mean_latency per
+    virtual-time unit; size the horizon for ~target receives."""
+    mean_lat = 0.5 * (LATENCY_LO + LATENCY_HI)
+    return LATENCY_LO + target * mean_lat / n_inflight
+
+
+def bench_cell(name: str, seed: int = 0) -> dict:
+    preset = get_population_preset(name)
+    pop = preset.population(seed=seed)
+    cfg = model_config(preset)
+    test = pop.test_dataset(1024)
+    params = model_lib.init_params(jax.random.PRNGKey(seed), cfg)
+    horizon = horizon_for(preset.n_inflight, TARGET_DISPATCHES)
+    sim = SimConfig(local_epochs=LOCAL_EPOCHS, batch_size=BATCH_SIZE,
+                    horizon=horizon, eval_every=horizon,
+                    latency_kind="uniform", latency_lo=LATENCY_LO,
+                    latency_hi=LATENCY_HI, seed=seed, eval_batches=2,
+                    engine="cohort", **preset.sim_kwargs())
+
+    stores = []
+    orig_build = ClientSlabStore.build.__func__
+
+    def spy_build(cls, datasets, **kw):
+        s = orig_build(cls, datasets, **kw)
+        stores.append(s)
+        return s
+
+    ClientSlabStore.build = classmethod(spy_build)
+    try:
+        run_async("fedasync", cfg, params, pop, test, sim)     # warmup
+        with RssSampler() as rss:
+            t0 = time.perf_counter()
+            res = run_async("fedasync", cfg, params, pop, test, sim)
+            wall = time.perf_counter() - t0
+    finally:
+        ClientSlabStore.build = classmethod(orig_build)
+    assert res.engine == "cohort", res.engine        # no silent fallback
+    assert res.dispatches > 0
+    store = stores[-1]                               # the timed run's store
+    cell = {
+        "preset": name,
+        "num_clients": preset.num_clients,
+        "n_inflight": preset.n_inflight,
+        "horizon": horizon,
+        "shard_size": preset.shard_size,
+        "shard_cache": preset.shard_cache,
+        "resident_bound_mb": preset.resident_mb,
+        "dispatches": res.dispatches,
+        "launched": res.launched,
+        "cohorts": res.cohorts,
+        "mean_cohort_size": res.dispatches / max(res.cohorts, 1),
+        "wall_s": wall,
+        "per_dispatch_ms": 1e3 * wall / res.dispatches,
+        "dispatches_per_s": res.dispatches / wall,
+        "peak_rss_mb": rss.peak / 2**20,
+        "slab_stats": store.stats,
+        "final_accuracy": res.final_accuracy,
+    }
+    print(f"population,preset={name},C={preset.num_clients},"
+          f"dispatches={res.dispatches},wall_s={wall:.2f},"
+          f"per_dispatch_ms={cell['per_dispatch_ms']:.2f},"
+          f"peak_rss_mb={cell['peak_rss_mb']:.0f},"
+          f"slab={store.stats}", flush=True)
+    return cell
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--presets", default=None,
+                    help="comma list of population preset names "
+                         "(default POP_BENCH_PRESETS or pop-5k,pop-100k)")
+    args = ap.parse_args(argv)
+    names = (args.presets or os.environ.get("POP_BENCH_PRESETS",
+                                            DEFAULT_PRESETS)).split(",")
+    cells = [bench_cell(n.strip()) for n in names if n.strip()]
+    by_name = {c["preset"]: c for c in cells}
+    payload = {
+        "model": "paper-synthetic-mlp",
+        "backend": jax.default_backend(),
+        "local_epochs": LOCAL_EPOCHS,
+        "batch_size": BATCH_SIZE,
+        "target_dispatches": TARGET_DISPATCHES,
+        "cells": cells,
+    }
+    failures = []
+    if all(n in by_name for n in GATE_CELLS):
+        ratio = (by_name[GATE_CELLS[1]]["per_dispatch_ms"]
+                 / by_name[GATE_CELLS[0]]["per_dispatch_ms"])
+        payload["per_dispatch_ratio_100k_vs_5k"] = ratio
+        print(f"population,per_dispatch_ratio={ratio:.3f} (gate <= "
+              f"{GATE_RATIO})", flush=True)
+        if ratio > GATE_RATIO:
+            failures.append(f"per-dispatch cost at C=100k is {ratio:.2f}x "
+                            f"the C=5k cell (> {GATE_RATIO}x)")
+    if len(cells) >= 2:
+        margin = float(os.environ.get("POP_BENCH_RSS_MARGIN_MB", "600"))
+        small = min(cells, key=lambda c: c["num_clients"])
+        big = max(cells, key=lambda c: c["num_clients"])
+        delta = big["peak_rss_mb"] - small["peak_rss_mb"]
+        payload["rss_delta_mb"] = delta
+        payload["rss_margin_mb"] = margin
+        print(f"population,rss_delta_mb={delta:.0f} (gate <= {margin:.0f})",
+              flush=True)
+        if delta > margin:
+            failures.append(
+                f"peak RSS grew {delta:.0f} MB from C={small['num_clients']}"
+                f" to C={big['num_clients']} (> {margin:.0f} MB margin — "
+                f"resident memory must be set by shard geometry, not C)")
+    path = common.save("BENCH_population", payload)
+    print(f"wrote {path}")
+    for msg in failures:
+        print(f"WARNING: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

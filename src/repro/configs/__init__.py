@@ -9,6 +9,8 @@ import importlib
 from typing import Callable, Dict
 
 from repro.models.config import ModelConfig
+from repro.configs.population import (PopulationPreset, POPULATION_PRESETS,
+                                      get_population_preset)
 
 _ARCH_MODULES = {
     "xlstm-350m": "repro.configs.xlstm_350m",

@@ -1,11 +1,13 @@
 from repro.data.synthetic import (
     SyntheticClassification,
+    SyntheticPopulation,
     make_classification,
     make_lm_corpus,
     train_test_split,
 )
 from repro.data.partition import (dirichlet_partition, document_partition,
-                                  iid_partition)
+                                  iid_partition, skewed_client_sizes)
 from repro.data.calibration import make_calibration_batch
-from repro.data.loader import (ClientDataset, StackedClients, batch_iterator,
-                               data_kind_of, epoch_batch_indices)
+from repro.data.loader import (ClientDataset, ClientSlabStore,
+                               StackedClients, batch_iterator, data_kind_of,
+                               epoch_batch_indices)

@@ -23,6 +23,7 @@ drop-last rule), which is what makes the 1e-5 parity tests meaningful.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Iterator, List, Sequence
 
@@ -122,6 +123,159 @@ class StackedClients:
             mask[c, :n] = True
         return cls(x=x, y=y, sizes=sizes, mask=mask,
                    num_classes=d0.num_classes, kind=kind)
+
+
+class _ListSource:
+    """Row source over a materialized client-dataset list — the small-C
+    adapter that lets the streaming slab path run on exactly the data the
+    monolithic ``StackedClients`` slab would hold (digest-parity tests)."""
+
+    def __init__(self, datasets: Sequence[ClientDataset]):
+        self._datasets = list(datasets)
+        self.sizes = np.asarray([len(d) for d in self._datasets], np.int64)
+        self.n_max = int(self.sizes.max())
+        d0 = self._datasets[0].data
+        self.kind = data_kind_of(d0.x)
+        self.num_classes = d0.num_classes
+        self._xdtype = np.int32 if self.kind == "tokens" else np.float32
+        self._feat = d0.x.shape[1:]
+        self._lab = d0.y.shape[1:]
+
+    def member_rows(self, cids):
+        cids = np.asarray(cids, np.int64)
+        B = cids.shape[0]
+        x = np.zeros((B, self.n_max) + self._feat, self._xdtype)
+        y = np.zeros((B, self.n_max) + self._lab, np.int32)
+        for i, c in enumerate(cids):
+            d = self._datasets[int(c)]
+            n = int(self.sizes[c])
+            x[i, :n] = d.data.x.astype(self._xdtype)
+            y[i, :n] = d.data.y.astype(np.int32)
+        return x, y
+
+
+class ClientSlabStore:
+    """Chunked/streaming ``StackedClients``: fixed-size client shards with
+    lazy device upload behind a bounded LRU.
+
+    The monolithic slab holds all C clients on device at once —
+    O(C * n_max) memory, the population-scale blocker. This store keys
+    device residency by the *wave's member set* instead: ``gather(cids)``
+    returns the members' ``(B, n_max, ...)`` rows, serving each member
+    either from a cached device shard (clients ``[s*shard_size, (s+1) *
+    shard_size)`` as one array) or, for shards the wave barely touches,
+    from a direct host materialization of just those members ("row path" —
+    uploaded with the wave, never cached). A shard is materialized and
+    cached only when a wave wants >= ``promote`` of its clients, and at
+    most ``cache_shards`` shards stay resident (LRU), so host+device data
+    memory is O(cache_shards * shard_size * n_max) — set by the shard
+    geometry, not by C.
+
+    Rows come from a deterministic source (``member_rows`` is a pure
+    function of client id), so evictions can never change results — only
+    which path serves a member. ``stats`` counts both paths for the tests
+    and the population benchmark.
+    """
+
+    def __init__(self, source, *, shard_size: int, cache_shards: int = 32,
+                 promote: int = 8):
+        self.source = source
+        self.sizes = np.asarray(source.sizes, np.int64)
+        self.num_clients = int(self.sizes.shape[0])
+        self.shard_size = int(shard_size)
+        assert self.shard_size >= 1
+        self.num_shards = -(-self.num_clients // self.shard_size)
+        self.cache_shards = max(1, int(cache_shards))
+        self.promote = max(1, int(promote))
+        self._cache: OrderedDict = OrderedDict()   # sid -> (x_dev, y_dev)
+        self.hits = 0            # members served from cached shards
+        self.row_fetches = 0     # members served via the row path
+        self.shard_loads = 0     # full-shard materializations
+        self.evictions = 0
+
+    @classmethod
+    def build(cls, client_datasets, *, shard_size: int = 0,
+              cache_shards: int = 32, promote: int = 8) -> "ClientSlabStore":
+        """Wrap either a lazy population (anything with ``member_rows``) or
+        a plain client-dataset list; ``shard_size=0`` picks a default."""
+        source = (client_datasets
+                  if hasattr(client_datasets, "member_rows")
+                  else _ListSource(client_datasets))
+        if shard_size <= 0:
+            shard_size = min(1024, int(np.asarray(source.sizes).shape[0]))
+        return cls(source, shard_size=shard_size, cache_shards=cache_shards,
+                   promote=promote)
+
+    @property
+    def n_max(self) -> int:
+        return self.source.n_max
+
+    @property
+    def kind(self) -> str:
+        return self.source.kind
+
+    @property
+    def num_classes(self) -> int:
+        return self.source.num_classes
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "row_fetches": self.row_fetches,
+                "shard_loads": self.shard_loads, "evictions": self.evictions,
+                "resident_shards": len(self._cache)}
+
+    def _load_shard(self, sid: int):
+        import jax.numpy as jnp
+        lo = sid * self.shard_size
+        hi = min(lo + self.shard_size, self.num_clients)
+        x, y = self.source.member_rows(np.arange(lo, hi))
+        entry = (jnp.asarray(x), jnp.asarray(y))
+        self._cache[sid] = entry
+        self.shard_loads += 1
+        while len(self._cache) > self.cache_shards:
+            self._cache.popitem(last=False)
+            self.evictions += 1
+        return entry
+
+    def gather(self, cids):
+        """Members' rows as device ``(B, n_max, ...)`` arrays, one gather
+        per touched cached shard plus at most one row-path upload, restored
+        to input order (mirrors ``simulator._gather_snapshots``)."""
+        import jax.numpy as jnp
+        cids = np.asarray(cids, np.int64)
+        B = cids.shape[0]
+        by_shard: dict = {}
+        for pos, c in enumerate(cids):
+            by_shard.setdefault(int(c) // self.shard_size, []).append(pos)
+        parts_x, parts_y, positions, miss = [], [], [], []
+        for sid, poss in by_shard.items():
+            entry = self._cache.get(sid)
+            if entry is None and len(poss) >= self.promote:
+                entry = self._load_shard(sid)
+            if entry is None:
+                miss.extend(poss)
+                self.row_fetches += len(poss)
+                continue
+            self._cache.move_to_end(sid)
+            self.hits += len(poss)
+            rows = cids[poss] - sid * self.shard_size
+            rows_j = jnp.asarray(rows.astype(np.int32))
+            parts_x.append(entry[0][rows_j])
+            parts_y.append(entry[1][rows_j])
+            positions.extend(poss)
+        if miss:
+            x_h, y_h = self.source.member_rows(cids[miss])
+            parts_x.append(jnp.asarray(x_h))
+            parts_y.append(jnp.asarray(y_h))
+            positions.extend(miss)
+        x = parts_x[0] if len(parts_x) == 1 else jnp.concatenate(parts_x)
+        y = parts_y[0] if len(parts_y) == 1 else jnp.concatenate(parts_y)
+        if positions != list(range(B)):
+            inv = np.empty(B, np.int32)
+            inv[np.asarray(positions)] = np.arange(B, dtype=np.int32)
+            inv_j = jnp.asarray(inv)
+            x, y = x[inv_j], y[inv_j]
+        return x, y
 
 
 def batch_iterator(ds: SyntheticClassification, batch_size: int,

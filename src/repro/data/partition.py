@@ -33,6 +33,20 @@ def dirichlet_partition(ds: SyntheticClassification, num_clients: int,
     raise RuntimeError("dirichlet_partition failed to satisfy min_size")
 
 
+def skewed_client_sizes(num_clients: int, *, mean: int = 64,
+                        spread: float = 0.6, lo: int = 16, hi: int = 512,
+                        seed: int = 0) -> np.ndarray:
+    """Per-client dataset sizes for a lazy population: log-normal around
+    ``mean`` (clipped to [lo, hi]) so a minority of clients hold most of the
+    data — the size analogue of the Dirichlet label-skew protocol. One
+    vectorized draw, O(C) at C=10^6; deterministic in (args, seed)."""
+    if not (0 < lo <= mean <= hi):
+        raise ValueError(f"need 0 < lo <= mean <= hi, got {lo}/{mean}/{hi}")
+    rng = np.random.RandomState(seed)
+    raw = np.exp(rng.normal(np.log(float(mean)), spread, size=num_clients))
+    return np.clip(np.round(raw), lo, hi).astype(np.int64)
+
+
 def iid_partition(ds: SyntheticClassification, num_clients: int,
                   seed: int = 0) -> List[np.ndarray]:
     rng = np.random.RandomState(seed)

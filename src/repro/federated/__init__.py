@@ -12,7 +12,8 @@ from repro.federated.simulator import (
     ALGORITHMS,
     ENGINES,
 )
-from repro.federated.cohort import CohortEngine
+from repro.federated.cohort import CohortEngine, StreamingCohortEngine
+from repro.federated.timeline import Timeline
 from repro.federated.servers import (make_server, make_lane_server,
                                      LanePolicyServer, PolicyServer,
                                      ShardedPolicyServer, server_state_specs)
@@ -28,6 +29,8 @@ from repro.federated.policies import (
 )
 from repro.federated.legacy import make_legacy_server
 from repro.federated.client import local_update
-from repro.federated.latency import (make_latency_sampler,
+from repro.federated.latency import (AvailabilityTrace,
+                                     make_availability_trace,
+                                     make_latency_sampler,
                                      per_client_availability,
                                      per_client_latency)

@@ -319,3 +319,176 @@ class CohortEngine:
             jnp.asarray(idx), jnp.asarray(valid), jnp.asarray(counts),
             jnp.asarray(lr_steps))
         return deltas[:, :B], w[:, :B]
+
+
+class StreamingCohortEngine(CohortEngine):
+    """The cohort engine over streamed client slabs (population scale).
+
+    Same compiled member program as ``CohortEngine`` except the data
+    arrives per wave: instead of indexing a resident ``(C, n_max, ...)``
+    slab by client id inside the jit, each member receives its own
+    ``(n_max, ...)`` rows, gathered by a ``data.loader.ClientSlabStore``
+    (cached device shards + on-demand row uploads). Members train on
+    exactly the rows the monolithic slab holds for them and the batch
+    schedules come from the same ``epoch_batch_indices`` stream, so the two
+    engines agree to float tolerance — the streaming digest-parity tests
+    pin this. Memory is bounded by the store's shard geometry, not by C.
+
+    Single-device by construction (the simulator rejects mesh +
+    streaming); the lane variant mirrors ``sweep_update`` with the wave's
+    row slab shared across lanes.
+    """
+
+    def __init__(self, cfg: ModelConfig, store, spec: tu.FlatSpec,
+                 template_params, *, local_epochs: int = 5,
+                 batch_size: int = 64, prox: float = 0.0,
+                 align: float = 0.0):
+        fam = registry.get_family(cfg)
+        self._data_kind = fam.data_kind
+        self.cfg = cfg
+        self.spec = spec
+        self.local_epochs = int(local_epochs)
+        self.batch_size = int(batch_size)
+        self.prox = float(prox)
+        self.align = float(align)
+        self.store = store
+        self.sizes = np.asarray(store.sizes, np.int64)
+        self.mesh = None
+        self.cohort_axis = None
+        bs_c = np.minimum(self.batch_size, self.sizes)
+        self.steps_per_client = (self.local_epochs
+                                 * (self.sizes // bs_c)).astype(int)
+        self.num_steps = int(self.steps_per_client.max())
+        self.bs_pad = int(bs_c.max())
+        key = (cfg, spec, self.prox, self.align, fam, "rows")
+        if key not in _RUN_CACHE:
+            _RUN_CACHE[key] = self._build_rows(cfg, spec, self.prox,
+                                               self.align, fam)
+        self._run_rows, self._run_rows_lanes = _RUN_CACHE[key]
+
+    @staticmethod
+    def _build_rows(cfg, spec, prox, align, fam):
+        def member(xs, ys, p0_flat, idx, valid, counts, lr_steps):
+            # identical member program to CohortEngine._build, minus the
+            # in-jit x_all[cid] gather: xs/ys are this member's rows
+            anchor = spec.unflatten(p0_flat)
+
+            def loss(p, xb, yb, vm, cnt):
+                base = fam.client_loss(p, fam.masked_batch(xb, yb, vm, cnt),
+                                       cfg, SINGLE_DEVICE_RULES)
+                if prox > 0.0:
+                    base = base + 0.5 * prox * tu.tree_sq_norm(
+                        tu.tree_sub(p, anchor))
+                if align > 0.0:
+                    base = base + 0.5 * align * tu.tree_sq_norm(
+                        tu.tree_sub(_head(p), _head(anchor)))
+                return base
+
+            grad = jax.grad(loss)
+
+            def body(p, sl):
+                bi, vm, cnt, lr_t = sl
+                g = grad(p, xs[bi], ys[bi], vm, cnt)
+                p = jax.tree_util.tree_map(lambda a, b: a - lr_t * b, p, g)
+                return p, None
+
+            p, _ = jax.lax.scan(body, anchor, (idx, valid, counts, lr_steps))
+            return spec.flatten(p)
+
+        @jax.jit
+        def run(x_rows, y_rows, params_stack, idx, valid, counts, lr_steps):
+            w = jax.vmap(member, in_axes=(0, 0, 0, 0, 0, 0, 0))(
+                x_rows, y_rows, params_stack, idx, valid, counts, lr_steps)
+            return w - params_stack, w
+
+        over_members = jax.vmap(member, in_axes=(0, 0, 0, 0, 0, 0, 0))
+
+        @jax.jit
+        def run_lanes(x_rows, y_rows, params_stack, idx, valid, counts,
+                      lr_steps):
+            # lanes share the wave's row slab, schedules shapes and lr; the
+            # snapshots and index permutations are per-lane
+            w = jax.vmap(over_members,
+                         in_axes=(None, None, 0, 0, None, None, None))(
+                x_rows, y_rows, params_stack, idx, valid, counts, lr_steps)
+            return w - params_stack, w
+
+        return run, run_lanes
+
+    def _wave_rows(self, cids: np.ndarray, pad: int):
+        """The wave's (Bp, n_max, ...) device row slab, zero-padded rows
+        for bucket-grid members (their lr is 0 — exact no-ops)."""
+        x, y = self.store.gather(cids)
+        if pad > 0:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+            y = jnp.concatenate(
+                [y, jnp.zeros((pad,) + y.shape[1:], y.dtype)])
+        return x, y
+
+    def cohort_update(self, params_stack: jnp.ndarray, cids: Sequence[int],
+                      lrs: Sequence[float], seeds: Sequence[int]
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        B = int(params_stack.shape[0])
+        assert B >= 1
+        cids = np.asarray(cids, np.int32)
+        idx, valid, counts, nvalid = self._schedules(cids, np.asarray(seeds))
+        lr_steps = (np.asarray(lrs, np.float64)[:, None]
+                    * (nvalid > 0.0)).astype(np.float32)
+        Bp = bucket_size(B, self._data_kind)
+        pad = Bp - B
+        x, y = self._wave_rows(cids, pad)
+        if pad > 0:
+            def padded(a):
+                return np.concatenate(
+                    [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+
+            params_stack = jnp.concatenate(
+                [params_stack, jnp.zeros((pad, params_stack.shape[1]),
+                                         params_stack.dtype)])
+            idx, valid, lr_steps = map(padded, (idx, valid, lr_steps))
+            counts = np.concatenate(
+                [counts, np.ones((pad,) + counts.shape[1:], counts.dtype)])
+        deltas, w = self._run_rows(x, y, params_stack, jnp.asarray(idx),
+                                   jnp.asarray(valid), jnp.asarray(counts),
+                                   jnp.asarray(lr_steps))
+        return deltas[:B], w[:B]
+
+    def sweep_update(self, params_stack: jnp.ndarray, cids: Sequence[int],
+                     lrs: Sequence[float], seeds_per_lane: np.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        S, B = int(params_stack.shape[0]), int(params_stack.shape[1])
+        assert B >= 1 and S >= 1
+        cids = np.asarray(cids, np.int32)
+        seeds_per_lane = np.asarray(seeds_per_lane)
+        built = {}
+        idx = np.zeros((S, B, self.num_steps, self.bs_pad), np.int32)
+        valid = counts = nvalid = None
+        for s in range(S):
+            key = tuple(int(v) for v in seeds_per_lane[s])
+            if key not in built:
+                built[key] = self._schedules(cids, seeds_per_lane[s])
+            idx[s], valid, counts, nvalid = built[key]
+        lr_steps = (np.asarray(lrs, np.float64)[:, None]
+                    * (nvalid > 0.0)).astype(np.float32)
+        Bp = bucket_size(B, self._data_kind)
+        pad = Bp - B
+        x, y = self._wave_rows(cids, pad)
+        if pad > 0:
+            def padded(a):
+                return np.concatenate(
+                    [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+
+            params_stack = jnp.concatenate(
+                [params_stack,
+                 jnp.zeros((S, pad, params_stack.shape[2]),
+                           params_stack.dtype)], axis=1)
+            idx = np.concatenate(
+                [idx, np.zeros((S, pad) + idx.shape[2:], idx.dtype)], axis=1)
+            valid, lr_steps = padded(valid), padded(lr_steps)
+            counts = np.concatenate(
+                [counts, np.ones((pad,) + counts.shape[1:], counts.dtype)])
+        deltas, w = self._run_rows_lanes(
+            x, y, params_stack, jnp.asarray(idx), jnp.asarray(valid),
+            jnp.asarray(counts), jnp.asarray(lr_steps))
+        return deltas[:, :B], w[:, :B]

@@ -31,10 +31,9 @@ slot for the full response time, then re-dispatches without a receive.
 """
 from __future__ import annotations
 
-import heapq
 import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, NamedTuple, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,11 +41,15 @@ import numpy as np
 
 from repro.common import tree as tu
 from repro.core import psa as psa_lib
-from repro.data.loader import ClientDataset, StackedClients
+from repro.data.loader import ClientDataset, ClientSlabStore, StackedClients
 from repro.federated import client as client_lib
 from repro.federated import servers as servers_lib
-from repro.federated.cohort import CohortEngine
-from repro.federated.latency import per_client_availability, per_client_latency
+from repro.federated.cohort import CohortEngine, StreamingCohortEngine
+from repro.federated.latency import (STREAM_AVAIL_DRAWS, _subseed,
+                                     make_availability_trace,
+                                     per_client_availability,
+                                     per_client_latency)
+from repro.federated.timeline import Timeline, _Event
 from repro.models import model as model_lib
 from repro.models import registry
 from repro.models.config import ModelConfig
@@ -113,7 +116,7 @@ class SimConfig:
     timeline_seed: Optional[int] = None
     # Periodic full-fidelity snapshots (repro.checkpoint.store layout):
     # every ``checkpoint_every`` virtual-time units the simulator persists
-    # the ServerState, both host RNG streams, the in-flight event heap and
+    # the ServerState, the host RNG streams, the in-flight event timeline and
     # the metric/digest streams under ``checkpoint_dir``. ``resume=True``
     # restores the latest snapshot and reproduces the remaining trajectory
     # exactly. Single runs only (sweeps are not checkpointed).
@@ -124,6 +127,17 @@ class SimConfig:
     eval_batch_size: int = 512
     engine: str = "cohort"             # "cohort" (batched) | "sequential"
     max_cohort: int = 256              # cap on one wave's device batch
+    # Streaming client slabs (population scale): ``shard_size > 0`` switches
+    # the cohort engine from the monolithic (C, n_max, ...) device slab to
+    # fixed-size client shards uploaded lazily per wave behind a bounded LRU
+    # (``data.loader.ClientSlabStore``); host+device data memory is then
+    # O(shard_cache * shard_size * n_max), independent of C. Passing a lazy
+    # population (e.g. ``data.synthetic.SyntheticPopulation``) instead of a
+    # client-dataset list forces the streaming path (auto shard size when 0).
+    shard_size: int = 0                # clients per shard; 0 = monolithic
+    shard_cache: int = 32              # max resident shards (LRU)
+    shard_promote: int = 8             # cache a shard once a wave wants
+                                       # >= this many of its clients
     # Layout: with a mesh, the policy server shards ServerState over the
     # mesh's flat-parameter axis (servers.ShardedPolicyServer) and the
     # cohort engine trains waves data-parallel over the client axis; rules
@@ -383,14 +397,14 @@ def make_digest_fn(d: int) -> Callable:
 # ---------------------------------------------------------------------------
 # Simulator checkpointing (SimConfig.checkpoint_dir / checkpoint_every)
 # ---------------------------------------------------------------------------
-# A snapshot is taken at wave boundaries (heap complete, all receives
-# applied): the ServerState leaves, both host RNG streams (dispatch +
-# latency jitter), the in-flight events with their dispatch snapshots
-# materialized to one (n, d) stack, and the metric/digest/receive-log
-# streams — enough to restore mid-run and reproduce the REMAINING digest
-# stream exactly. ``server.log`` (the policy's rendered per-update log) is
-# the one stream NOT persisted: a resumed run's copy covers only the
-# post-resume segment.
+# A snapshot is taken at wave boundaries (timeline complete, all receives
+# applied): the ServerState leaves, the three host RNG streams (dispatch,
+# latency jitter, availability draws), the in-flight events with their
+# dispatch snapshots materialized to one (n, d) stack, and the
+# metric/digest/receive-log streams — enough to restore mid-run and
+# reproduce the REMAINING digest stream exactly. ``server.log`` (the
+# policy's rendered per-update log) is the one stream NOT persisted: a
+# resumed run's copy covers only the post-resume segment.
 
 def _rng_pack(rng: np.random.RandomState) -> dict:
     kind, keys, pos, has_gauss, cached = rng.get_state()
@@ -418,12 +432,12 @@ def _event_snapshot_vec(ev: "_Event", spec: tu.FlatSpec) -> np.ndarray:
     return np.asarray(spec.flatten(s))
 
 
-def _ckpt_save(sim: "SimConfig", server, rng, latency, heap,
+def _ckpt_save(sim: "SimConfig", server, rng, latency, avail_rng, timeline,
                result: "SimResult", t: float, next_eval: float,
                seq: int) -> str:
     from repro.checkpoint import store
     spec = server.policy.spec
-    events = sorted(heap)
+    events = timeline.events()
     tree = {
         "server": {f"{i:04d}": np.asarray(x) for i, x in
                    enumerate(jax.tree_util.tree_leaves(server.state))},
@@ -438,6 +452,7 @@ def _ckpt_save(sim: "SimConfig", server, rng, latency, heap,
         },
         "rng": _rng_pack(rng),
         "lat_rng": _rng_pack(latency.rng),
+        "avail_rng": _rng_pack(avail_rng),
         "counters": np.asarray(
             [t, next_eval, seq, result.dispatches, result.launched,
              result.dropped, result.cohorts, server.version], np.float64),
@@ -466,13 +481,14 @@ def _ckpt_like(server) -> dict:
                                   "snapshots")},
         "rng": {k: z for k in ("keys", "pos", "has_gauss", "cached")},
         "lat_rng": {k: z for k in ("keys", "pos", "has_gauss", "cached")},
+        "avail_rng": {k: z for k in ("keys", "pos", "has_gauss", "cached")},
         "counters": z, "times": z, "accuracies": z, "digests": z,
         "receive_log": {k: z for k in ("t", "tau", "client")},
     }
 
 
-def _ckpt_restore(sim: "SimConfig", server, rng, latency, heap,
-                  result: "SimResult", batched: bool):
+def _ckpt_restore(sim: "SimConfig", server, rng, latency, avail_rng,
+                  timeline, result: "SimResult", batched: bool):
     """Restore the latest snapshot under ``sim.checkpoint_dir`` into the
     live run, returning ``(t, next_eval, seq)`` — or None when there is no
     snapshot to resume from (the run then starts fresh)."""
@@ -487,6 +503,7 @@ def _ckpt_restore(sim: "SimConfig", server, rng, latency, heap,
     server.state = jax.tree_util.tree_unflatten(treedef, leaves)
     _rng_unpack(rng, tree["rng"])
     _rng_unpack(latency.rng, tree["lat_rng"])
+    _rng_unpack(avail_rng, tree["avail_rng"])
     (t, next_eval, seq, dispatches, launched, dropped, cohorts,
      version) = (float(v) for v in tree["counters"])
     server._version = int(version)
@@ -494,12 +511,12 @@ def _ckpt_restore(sim: "SimConfig", server, rng, latency, heap,
     snaps = jnp.asarray(ev["snapshots"], jnp.float32)
     unflatten = (None if batched
                  else tu.jit_unflatten(server.policy.spec))
-    heap.clear()
-    for i in range(len(ev["seq"])):
-        snap = (snaps, i) if batched else unflatten(snaps[i])
-        heapq.heappush(heap, _Event(
-            float(ev["t_done"][i]), int(ev["seq"][i]), int(ev["cid"][i]),
-            snap, int(ev["version"][i]), bool(ev["ok"][i])))
+    timeline.clear()
+    n = len(ev["seq"])
+    snap_refs = [(snaps, i) if batched else unflatten(snaps[i])
+                 for i in range(n)]
+    timeline.extend_arrays(ev["t_done"], ev["seq"], ev["cid"],
+                           ev["version"], ev["ok"], snap_refs)
     result.dispatches = int(dispatches)
     result.launched = int(launched)
     result.dropped = int(dropped)
@@ -514,18 +531,44 @@ def _ckpt_restore(sim: "SimConfig", server, rng, latency, heap,
     return float(t), float(next_eval), int(seq)
 
 
-class _Event(NamedTuple):
-    """One in-flight dispatch. ``snapshot`` is the global model captured at
-    dispatch time — a flat (d,) vector or a ``(source, row)`` reference into
-    a batched-ingest snapshot sequence (cohort engine), or the params pytree
-    (sequential engine); ``ok`` is the availability draw — False means the
-    client never reports back and the slot re-dispatches at ``t_done``."""
-    t_done: float
-    seq: int
-    cid: int
-    snapshot: object
-    version: int
-    ok: bool
+def _data_sizes(client_datasets) -> np.ndarray:
+    """(C,) per-client sample counts — reading ``.sizes`` when the client
+    source is a lazy population (no per-client dataset objects to len())."""
+    sizes = getattr(client_datasets, "sizes", None)
+    if sizes is not None:
+        return np.asarray(sizes, np.float64)
+    return np.array([len(d) for d in client_datasets], np.float64)
+
+
+def _wants_streaming(sim: "SimConfig", client_datasets) -> bool:
+    """The streaming slab path: explicitly via ``sim.shard_size > 0``, or
+    implicitly when the client source is a lazy population object rather
+    than a list of materialized ``ClientDataset``s."""
+    return sim.shard_size > 0 or not isinstance(client_datasets, (list, tuple))
+
+
+def _make_cohort_engine(cfg, client_datasets, spec, template_params,
+                        sim: "SimConfig", *, prox: float = 0.0,
+                        align: float = 0.0):
+    """Build the wave-training engine: the monolithic-slab ``CohortEngine``
+    by default, the shard-streaming variant when configured (see
+    ``SimConfig.shard_size``)."""
+    if _wants_streaming(sim, client_datasets):
+        if sim.mesh is not None:
+            raise ValueError("streaming client slabs are single-device; "
+                             "drop SimConfig.mesh or shard_size")
+        store = ClientSlabStore.build(
+            client_datasets, shard_size=sim.shard_size,
+            cache_shards=sim.shard_cache, promote=sim.shard_promote)
+        return StreamingCohortEngine(
+            cfg, store, spec, template_params,
+            local_epochs=sim.local_epochs, batch_size=sim.batch_size,
+            prox=prox, align=align)
+    stacked = StackedClients.from_datasets(client_datasets)
+    return CohortEngine(cfg, stacked, spec, template_params,
+                        local_epochs=sim.local_epochs,
+                        batch_size=sim.batch_size, prox=prox, align=align,
+                        mesh=sim.mesh, rules=sim.rules)
 
 
 def _gather_snapshots(snaps) -> jnp.ndarray:
@@ -612,7 +655,17 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
     avail = per_client_availability(sim.availability_kind, sim.dropout_rate,
                                     sim.num_clients, tseed,
                                     latency_means=lat_means)
-    use_avail = sim.availability_kind != "always" and sim.dropout_rate > 0.0
+    # The availability Bernoulli draws live on their OWN RNG stream (not the
+    # dispatch stream): batched dispatch draws all cids then all oks, which
+    # on a shared stream would diverge from the scalar interleaving. The
+    # trace kind replays a deterministic schedule and consumes no RNG.
+    avail_rng = np.random.RandomState(_subseed(tseed, STREAM_AVAIL_DRAWS))
+    use_trace = sim.availability_kind == "trace" and sim.dropout_rate > 0.0
+    trace = (make_availability_trace(sim.num_clients, sim.horizon,
+                                     sim.dropout_rate, tseed)
+             if use_trace else None)
+    use_avail = (sim.availability_kind not in ("always", "trace")
+                 and sim.dropout_rate > 0.0)
     sketch_fn = None
     if server_name == "fedpsa":
         psa_cfg = psa_cfg or psa_lib.PSAConfig()
@@ -629,31 +682,48 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
     evaluate = _make_eval(cfg, test_ds, sim)
     result = SimResult(engine=engine)
     concurrency = max(1, int(round(sim.concurrency * sim.num_clients)))
-    heap: List[_Event] = []
+    timeline = Timeline()
     seq = 0
-    data_sizes = np.array([len(d) for d in client_datasets], np.float64)
+    data_sizes = _data_sizes(client_datasets)
+
+    def dispatch_many(ts, snaps=None, versions=None):
+        """Issue a batch of dispatches as ONE run insertion: vectorized
+        client sampling, latency and availability draws. Stream-identical
+        to n scalar dispatches (numpy's legacy array fills consume the MT
+        state exactly as n scalar calls; cid/jitter/ok live on separate
+        streams so batching one does not reorder another)."""
+        nonlocal seq
+        n = len(ts)
+        ts = np.asarray(ts, np.float64)
+        cids = rng.randint(sim.num_clients, size=n)
+        t_done = ts + latency.sample_for(cids)
+        if use_trace:
+            oks = trace.on_at(cids, ts)
+        elif use_avail:
+            oks = avail_rng.rand(n) < avail[cids]
+        else:
+            oks = np.ones(n, bool)
+        if snaps is None:
+            cur = server.flat_params if batched else server.params
+            snaps = [cur] * n
+        if versions is None:
+            versions = np.full(n, server.version, np.int64)
+        timeline.extend_arrays(t_done, np.arange(seq, seq + n), cids,
+                               versions, oks, snaps)
+        seq += n
+        result.launched += n
 
     def dispatch(t: float, snap=None, version=None):
-        nonlocal seq
-        cid = int(rng.randint(sim.num_clients))
-        t_done = t + latency(cid)
-        ok = bool(rng.rand() < avail[cid]) if use_avail else True
-        if snap is None:
-            snap = server.flat_params if batched else server.params
-        if version is None:
-            version = server.version
-        heapq.heappush(heap, _Event(t_done, seq, cid, snap, version, ok))
-        seq += 1
-        result.launched += 1
+        dispatch_many([t], None if snap is None else [snap],
+                      None if version is None else [version])
 
     t0 = next_eval0 = 0.0
     resumed = None
     if sim.checkpoint_dir and sim.resume:
-        resumed = _ckpt_restore(sim, server, rng, latency, heap, result,
-                                batched)
+        resumed = _ckpt_restore(sim, server, rng, latency, avail_rng,
+                                timeline, result, batched)
     if resumed is None:
-        for _ in range(concurrency):
-            dispatch(0.0)
+        dispatch_many(np.zeros(concurrency))
     else:
         t0, next_eval0, seq = resumed
 
@@ -662,22 +732,23 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
         nxt = [(np.floor(t0 / sim.checkpoint_every) + 1)
                * sim.checkpoint_every]
 
-        def ckpt(heap_, t_, next_eval_):
+        def ckpt(timeline_, t_, next_eval_):
             if t_ < nxt[0]:
                 return
-            _ckpt_save(sim, server, rng, latency, heap_, result, t_,
-                       next_eval_, seq)
+            _ckpt_save(sim, server, rng, latency, avail_rng, timeline_,
+                       result, t_, next_eval_, seq)
             while nxt[0] <= t_:
                 nxt[0] += sim.checkpoint_every
 
     if batched:
         t = _drain_cohort(server, cfg, init_params, client_datasets, sim,
-                          dispatch, heap, evaluate, result, data_sizes,
-                          align, psa_cfg, calib_batch, receive_hook,
-                          digest_fn, t0=t0, next_eval0=next_eval0, ckpt=ckpt)
+                          dispatch_many, timeline, evaluate, result,
+                          data_sizes, align, psa_cfg, calib_batch,
+                          receive_hook, digest_fn, t0=t0,
+                          next_eval0=next_eval0, ckpt=ckpt)
     else:
         t = _drain_sequential(server, cfg, client_datasets, sim, dispatch,
-                              heap, evaluate, result, data_sizes, align,
+                              timeline, evaluate, result, data_sizes, align,
                               sketch_fn, receive_hook, digest_fn,
                               t0=t0, next_eval0=next_eval0, ckpt=ckpt)
 
@@ -690,17 +761,17 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
 
 
 def _drain_sequential(server, cfg, client_datasets, sim: SimConfig, dispatch,
-                      heap, evaluate, result: SimResult, data_sizes, align,
-                      sketch_fn, receive_hook, digest_fn=None, *,
+                      timeline, evaluate, result: SimResult, data_sizes,
+                      align, sketch_fn, receive_hook, digest_fn=None, *,
                       t0: float = 0.0, next_eval0: float = 0.0,
                       ckpt=None) -> float:
     """Legacy reference loop: one local_update per completion (oracle)."""
     next_eval = next_eval0
     t = t0
-    while heap and t < sim.horizon:
+    while timeline and t < sim.horizon:
         if ckpt is not None:
-            ckpt(heap, t, next_eval)
-        ev = heapq.heappop(heap)
+            ckpt(timeline, t, next_eval)
+        ev = timeline.pop()
         t = ev.t_done
         if t > sim.horizon:
             break
@@ -738,25 +809,22 @@ def _drain_sequential(server, cfg, client_datasets, sim: SimConfig, dispatch,
 
 
 def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
-                  dispatch, heap, evaluate, result: SimResult, data_sizes,
-                  align, psa_cfg, calib_batch, receive_hook,
+                  dispatch_many, timeline, evaluate, result: SimResult,
+                  data_sizes, align, psa_cfg, calib_batch, receive_hook,
                   digest_fn=None, *, t0: float = 0.0,
                   next_eval0: float = 0.0, ckpt=None) -> float:
     """Batched drain: train completion waves as single device calls.
 
-    A wave is the maximal heap prefix with ``t_done < t_first + latency_lo``
-    (capped at ``sim.max_cohort``). Any dispatch issued while the wave is
-    being received completes no earlier than ``t_first + latency_lo`` — and
-    at an equal timestamp sorts after the wave by ``seq`` — so training the
-    wave up front observes exactly the snapshots, learning rates, and seeds
-    the sequential engine would have used.
+    A wave is the maximal timeline prefix with ``t_done < t_first +
+    latency_lo`` (capped at ``sim.max_cohort``). Any dispatch issued while
+    the wave is being received completes no earlier than ``t_first +
+    latency_lo`` — and at an equal timestamp sorts after the wave by ``seq``
+    — so training the wave up front observes exactly the snapshots, learning
+    rates, and seeds the sequential engine would have used.
     """
     spec = server.policy.spec
-    stacked = StackedClients.from_datasets(client_datasets)
-    engine = CohortEngine(cfg, stacked, spec, init_params,
-                          local_epochs=sim.local_epochs,
-                          batch_size=sim.batch_size, align=align,
-                          mesh=sim.mesh, rules=sim.rules)
+    engine = _make_cohort_engine(cfg, client_datasets, spec, init_params,
+                                 sim, align=align)
     sketch_flat = None
     if server.needs_sketch:
         sketch_flat = make_sketch_fn_flat(cfg, calib_batch, psa_cfg, spec)
@@ -764,18 +832,19 @@ def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
 
     next_eval = next_eval0
     t = t0
-    while heap and t < sim.horizon:
+    while timeline and t < sim.horizon:
         if ckpt is not None:
-            ckpt(heap, t, next_eval)
-        first = heapq.heappop(heap)
+            ckpt(timeline, t, next_eval)
+        first = timeline.pop()
         if first.t_done > sim.horizon:
             t = first.t_done       # mirror the sequential pop-then-break
             break
         bound = first.t_done + sim.latency_lo
         wave: List[_Event] = [first]
         t_over = None
-        while heap and heap[0].t_done < bound and len(wave) < sim.max_cohort:
-            ev = heapq.heappop(heap)
+        while (timeline and timeline.head_t() < bound
+               and len(wave) < sim.max_cohort):
+            ev = timeline.pop()
             if ev.t_done > sim.horizon:
                 t_over = ev.t_done  # discarded, like the sequential break
                 break
@@ -841,6 +910,9 @@ def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
                 next_row = r1
             vcur = server.version - int(np.sum(upd))  # version pre-flush
             oi = 0
+            # replacement dispatches batched as ONE run insertion; each
+            # snapshots the global vector as of *its* event (snaps rows)
+            ts_, snaps_, vers_ = [], [], []
             for ev in pending:
                 if ev.ok:
                     cur = (snaps, oi)   # row reference, gathered lazily
@@ -848,7 +920,10 @@ def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
                     oi += 1
                 else:
                     result.dropped += 1
-                dispatch(ev.t_done, snap=cur, version=vcur)
+                ts_.append(ev.t_done)
+                snaps_.append(cur)
+                vers_.append(vcur)
+            dispatch_many(ts_, snaps_, vers_)
             pending.clear()
 
         for ev in wave:
@@ -1006,7 +1081,13 @@ def run_sweep(server_name: str, cfg: ModelConfig, init_params,
     avail = per_client_availability(sim.availability_kind, sim.dropout_rate,
                                     sim.num_clients, tseed,
                                     latency_means=lat_means)
-    use_avail = sim.availability_kind != "always" and sim.dropout_rate > 0.0
+    avail_rng = np.random.RandomState(_subseed(tseed, STREAM_AVAIL_DRAWS))
+    use_trace = sim.availability_kind == "trace" and sim.dropout_rate > 0.0
+    trace = (make_availability_trace(sim.num_clients, sim.horizon,
+                                     sim.dropout_rate, tseed)
+             if use_trace else None)
+    use_avail = (sim.availability_kind not in ("always", "trace")
+                 and sim.dropout_rate > 0.0)
     sketch_fn = None
     if server_name == "fedpsa":
         psa_cfg = psa_cfg or psa_lib.PSAConfig()
@@ -1024,29 +1105,36 @@ def run_sweep(server_name: str, cfg: ModelConfig, init_params,
                          lane_accuracies=[[] for _ in range(S)],
                          digests=[[] for _ in range(S)])
     concurrency = max(1, int(round(sim.concurrency * sim.num_clients)))
-    heap: List[_Event] = []
+    timeline = Timeline()
     seq = 0
-    data_sizes = np.array([len(d) for d in client_datasets], np.float64)
+    data_sizes = _data_sizes(client_datasets)
 
-    def dispatch(t: float, snap=None, version=None):
+    def dispatch_many(ts, snaps=None, versions=None):
         nonlocal seq
-        cid = int(rng.randint(sim.num_clients))
-        t_done = t + latency(cid)
-        ok = bool(rng.rand() < avail[cid]) if use_avail else True
-        if snap is None:
-            snap = server.flat_params          # (S, d) lane stack
-        if version is None:
-            version = server.version
-        heapq.heappush(heap, _Event(t_done, seq, cid, snap, version, ok))
-        seq += 1
-        result.launched += 1
+        n = len(ts)
+        ts = np.asarray(ts, np.float64)
+        cids = rng.randint(sim.num_clients, size=n)
+        t_done = ts + latency.sample_for(cids)
+        if use_trace:
+            oks = trace.on_at(cids, ts)
+        elif use_avail:
+            oks = avail_rng.rand(n) < avail[cids]
+        else:
+            oks = np.ones(n, bool)
+        if snaps is None:
+            snaps = [server.flat_params] * n   # (S, d) lane stack
+        if versions is None:
+            versions = np.full(n, server.version, np.int64)
+        timeline.extend_arrays(t_done, np.arange(seq, seq + n), cids,
+                               versions, oks, snaps)
+        seq += n
+        result.launched += n
 
-    for _ in range(concurrency):
-        dispatch(0.0)
+    dispatch_many(np.zeros(concurrency))
 
     t = _drain_sweep(server, cfg, params_lanes, client_datasets, sim,
-                     dispatch, heap, evaluate, result, data_sizes, align,
-                     psa_cfg, calib_batch, digest_fn, data_seeds)
+                     dispatch_many, timeline, evaluate, result, data_sizes,
+                     align, psa_cfg, calib_batch, digest_fn, data_seeds)
 
     final = evaluate(server.flat_params)
     result.final_accuracy = [float(a) for a in final]
@@ -1058,34 +1146,33 @@ def run_sweep(server_name: str, cfg: ModelConfig, init_params,
 
 
 def _drain_sweep(server, cfg, params_lanes, client_datasets, sim: SimConfig,
-                 dispatch, heap, evaluate, result: SweepResult, data_sizes,
-                 align, psa_cfg, calib_batch, digest_fn,
+                 dispatch_many, timeline, evaluate, result: SweepResult,
+                 data_sizes, align, psa_cfg, calib_batch, digest_fn,
                  data_seeds) -> float:
     """The cohort drain, lane-stacked: identical wave selection and flush
     ordering to ``_drain_cohort`` (the timeline is lane-invariant), with
     every tensor growing a leading lane axis."""
     S = server.num_lanes
     spec = server.policy.spec
-    stacked = StackedClients.from_datasets(client_datasets)
-    engine = CohortEngine(cfg, stacked, spec, params_lanes[0],
-                          local_epochs=sim.local_epochs,
-                          batch_size=sim.batch_size, align=align)
+    engine = _make_cohort_engine(cfg, client_datasets, spec, params_lanes[0],
+                                 sim, align=align)
     sketch_lanes = None
     if server.needs_sketch:
         sketch_lanes = make_sketch_fn_lanes(cfg, calib_batch, psa_cfg, spec)
 
     next_eval = 0.0
     t = 0.0
-    while heap and t < sim.horizon:
-        first = heapq.heappop(heap)
+    while timeline and t < sim.horizon:
+        first = timeline.pop()
         if first.t_done > sim.horizon:
             t = first.t_done
             break
         bound = first.t_done + sim.latency_lo
         wave: List[_Event] = [first]
         t_over = None
-        while heap and heap[0].t_done < bound and len(wave) < sim.max_cohort:
-            ev = heapq.heappop(heap)
+        while (timeline and timeline.head_t() < bound
+               and len(wave) < sim.max_cohort):
+            ev = timeline.pop()
             if ev.t_done > sim.horizon:
                 t_over = ev.t_done
                 break
@@ -1138,6 +1225,7 @@ def _drain_sweep(server, cfg, params_lanes, client_datasets, sim: SimConfig,
                 next_row = r1
             vcur = server.version - int(np.sum(upd))
             oi = 0
+            ts_, snaps_, vers_ = [], [], []
             for ev in pending:
                 if ev.ok:
                     cur = (snaps, oi)
@@ -1145,7 +1233,10 @@ def _drain_sweep(server, cfg, params_lanes, client_datasets, sim: SimConfig,
                     oi += 1
                 else:
                     result.dropped += 1
-                dispatch(ev.t_done, snap=cur, version=vcur)
+                ts_.append(ev.t_done)
+                snaps_.append(cur)
+                vers_.append(vcur)
+            dispatch_many(ts_, snaps_, vers_)
             pending.clear()
 
         for ev in wave:
@@ -1180,19 +1271,23 @@ def run_fedavg(cfg: ModelConfig, init_params, client_datasets: List[ClientDatase
     avail = per_client_availability(sim.availability_kind, sim.dropout_rate,
                                     sim.num_clients, tseed,
                                     latency_means=lat_means)
-    use_avail = sim.availability_kind != "always" and sim.dropout_rate > 0.0
+    avail_rng = np.random.RandomState(_subseed(tseed, STREAM_AVAIL_DRAWS))
+    use_trace = sim.availability_kind == "trace" and sim.dropout_rate > 0.0
+    trace = (make_availability_trace(sim.num_clients, sim.horizon,
+                                     sim.dropout_rate, tseed)
+             if use_trace else None)
+    use_avail = (sim.availability_kind not in ("always", "trace")
+                 and sim.dropout_rate > 0.0)
     evaluate = _make_eval(cfg, test_ds, sim)
     engine = _resolve_engine(sim, cfg)
     batched = engine == "cohort"
     result = SimResult(engine=engine)
     m = max(1, int(round(sim.concurrency * sim.num_clients)))
+    data_sizes = _data_sizes(client_datasets)
     if batched:
         spec = tu.FlatSpec(init_params)
-        stacked = StackedClients.from_datasets(client_datasets)
-        engine = CohortEngine(cfg, stacked, spec, init_params,
-                              local_epochs=sim.local_epochs,
-                              batch_size=sim.batch_size, prox=prox,
-                              mesh=sim.mesh, rules=sim.rules)
+        engine = _make_cohort_engine(cfg, client_datasets, spec, init_params,
+                                     sim, prox=prox)
         flat = jnp.array(spec.flatten(init_params), copy=True)
         params = None
     else:
@@ -1208,17 +1303,17 @@ def run_fedavg(cfg: ModelConfig, init_params, client_datasets: List[ClientDatase
             next_eval += sim.eval_every
         chosen = rng.choice(sim.num_clients, size=m, replace=False)
         result.launched += len(chosen)
-        round_time = max(latency(int(c)) for c in chosen)
-        if use_avail:
-            ok = [bool(rng.rand() < avail[int(c)]) for c in chosen]
-            result.dropped += sum(1 for o in ok if not o)
+        round_time = float(latency.sample_for(chosen).max())
+        if use_trace or use_avail:
+            ok = (trace.on_at(chosen, np.full(m, t)) if use_trace
+                  else avail_rng.rand(m) < avail[chosen])
+            result.dropped += int(np.sum(~ok))
             active = [int(c) for c, o in zip(chosen, ok) if o]
         else:
             active = [int(c) for c in chosen]
         lr = sim.lr * (sim.lr_decay ** rnd)
         if active:
-            sizes = np.asarray([len(client_datasets[c]) for c in active],
-                               np.float32)
+            sizes = np.asarray([data_sizes[c] for c in active], np.float32)
             w = jnp.asarray(sizes / np.sum(sizes))
             seeds = [sim.seed * 100003 + rnd * 51 + c for c in active]
             if batched:

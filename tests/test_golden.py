@@ -130,6 +130,22 @@ def test_cohort_matches_golden(world, name):
     _check(_run(world, name, "cohort"), _load(name))
 
 
+@pytest.mark.parametrize("name", POLICY_NAMES)
+def test_streaming_matches_golden(world, name):
+    """The chunked/streaming engine — client slabs split into 3-client
+    shards behind a 2-shard LRU cache, so the golden run is forced through
+    multiple shard loads AND at least one eviction — reproduces the same
+    digest stream as the monolithic stacked-slab engine."""
+    cfg, clients, test, calib, params = world
+    kw = {}
+    if name == "fedpsa":
+        kw = dict(psa_cfg=PSAConfig(**PSA), calib_batch=calib)
+    sim = SimConfig(engine="cohort", record_trajectory=True,
+                    shard_size=3, shard_cache=2, shard_promote=1, **SIM)
+    _check(run_algorithm(name, cfg, params, clients, test, sim, **kw),
+           _load(name))
+
+
 @pytest.mark.multidevice
 @pytest.mark.parametrize("ndev", (2, 4))
 @pytest.mark.parametrize("name", POLICY_NAMES)

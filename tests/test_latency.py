@@ -1,15 +1,16 @@
 """Client availability scenarios (``federated/latency.py``).
 
 Unit-level: the per-client availability distributions behave as documented
-(bounds, means, the slow-fragile latency coupling). Sim-level:
-``slow-fragile`` runs drop at the configured rate, a held slot re-dispatches
-with the server version *current at the moment the slot frees* (checked
-exactly against the event stream), and ``availability_kind="always"``
+(bounds, means, the slow-fragile latency coupling), the batched ``sample(n)``
+APIs are bit-identical to scalar draw loops (the golden digests depend on
+this), the availability sub-streams are decorrelated from the latency
+sub-streams, and trace-driven availability replays deterministically.
+Sim-level: ``slow-fragile`` runs drop at the configured rate, a held slot
+re-dispatches with the server version *current at the moment the slot frees*
+(checked exactly against the event stream), ``availability_kind="always"``
 reproduces the dropout-free trajectory bit-for-bit regardless of
-``dropout_rate``.
+``dropout_rate``, and trace runs share the dropout-free run's RNG streams.
 """
-import heapq
-
 import jax
 import numpy as np
 import pytest
@@ -19,7 +20,9 @@ from repro.data import (ClientDataset, dirichlet_partition,
                         make_classification, train_test_split)
 from repro.federated import SimConfig, run_algorithm
 from repro.federated import simulator as sim_mod
-from repro.federated.latency import (AVAILABILITY_KINDS,
+from repro.federated import timeline as tl_mod
+from repro.federated.latency import (AVAILABILITY_KINDS, _subseed,
+                                     make_availability_trace,
                                      make_latency_sampler,
                                      per_client_availability,
                                      per_client_latency)
@@ -42,6 +45,32 @@ def test_lognormal_latency_heavy_tail():
     replay = make_latency_sampler("lognormal", lo, hi, seed=0)
     np.testing.assert_array_equal(draws[:50],
                                   [replay() for _ in range(50)])
+
+
+def test_batched_sampler_matches_scalar_stream():
+    """``sample(n)`` must consume the RNG stream exactly as n scalar calls
+    — element-identical draws AND an interchangeable stream position (the
+    vectorized timeline's draws reproduce the per-dispatch goldens)."""
+    for kind in ("uniform", "longtail", "lognormal"):
+        a = make_latency_sampler(kind, 10.0, 500.0, seed=3)
+        b = make_latency_sampler(kind, 10.0, 500.0, seed=3)
+        scalars = np.array([a() for _ in range(257)])
+        np.testing.assert_array_equal(scalars, b.sample(257))
+        # interleaving batch and scalar draws hits the same stream points
+        c = make_latency_sampler(kind, 10.0, 500.0, seed=3)
+        mixed = np.concatenate([c.sample(100), [c()], c.sample(156)])
+        np.testing.assert_array_equal(scalars, mixed)
+
+
+def test_per_client_latency_batch_jitter_matches_scalar():
+    """``sample_for(cids)`` continues the jitter stream exactly where
+    scalar ``sampler(cid)`` calls would."""
+    a, means_a = per_client_latency("uniform", 10.0, 500.0, 64, seed=5)
+    b, means_b = per_client_latency("uniform", 10.0, 500.0, 64, seed=5)
+    np.testing.assert_array_equal(means_a, means_b)
+    cids = np.array([3, 17, 3, 60, 0, 9])
+    scalars = np.array([a(int(c)) for c in cids])
+    np.testing.assert_array_equal(scalars, b.sample_for(cids))
 
 
 def test_lognormal_per_client_latency_plumbs():
@@ -110,6 +139,66 @@ def test_availability_validation():
         per_client_availability("nope", 0.2, 10)
 
 
+def test_rng_streams_decorrelated_at_equal_base_seed():
+    """Regression for the ad-hoc ``seed + 0x5EED`` availability seeding: at
+    one base seed, the latency-means, jitter and availability streams must
+    all start from distinct MT19937 states (no stream may replay another)."""
+    for seed in (0, 1, 24306 - 0x5EED, 12345):
+        subs = [_subseed(seed, s) for s in range(5)]
+        assert len(set(subs)) == len(subs), (seed, subs)
+        draws = [np.random.RandomState(ss).rand(8) for ss in subs]
+        for i in range(len(draws)):
+            for j in range(i + 1, len(draws)):
+                assert not np.array_equal(draws[i], draws[j]), (seed, i, j)
+    # the hetero probabilities draw from the dedicated availability stream,
+    # not from the latency streams
+    _, means = per_client_latency("uniform", 10.0, 500.0, 100, seed=7)
+    p = per_client_availability("hetero", 0.3, 100, seed=7)
+    assert abs(np.corrcoef(means, p)[0, 1]) < 0.3
+
+
+# ---------------------------------------------------------------------------
+# Unit: trace-driven availability
+# ---------------------------------------------------------------------------
+
+
+def test_trace_deterministic_and_off_fraction():
+    tr = make_availability_trace(60, 10_000.0, 0.4, seed=3)
+    tr2 = make_availability_trace(60, 10_000.0, 0.4, seed=3)
+    np.testing.assert_array_equal(tr.toggles, tr2.toggles)
+    np.testing.assert_array_equal(tr.offsets, tr2.offsets)
+    np.testing.assert_array_equal(tr.start_on, tr2.start_on)
+    # long-run on fraction tracks 1 - off_fraction on average
+    frac = tr.on_fraction(10_000.0)
+    assert abs(frac.mean() - 0.6) < 0.08, frac.mean()
+    assert frac.std() > 0.01          # clients have individual schedules
+    tr3 = make_availability_trace(60, 10_000.0, 0.4, seed=4)
+    assert not np.array_equal(tr.toggles, tr3.toggles)
+
+
+def test_trace_on_at_matches_toggle_replay():
+    """``on_at`` agrees with a literal replay of each client's toggles."""
+    tr = make_availability_trace(10, 2_000.0, 0.5, seed=0)
+    ts = np.linspace(0.0, 2_000.0, 101)
+    for c in range(10):
+        tg = tr.toggles[tr.offsets[c]:tr.offsets[c + 1]]
+        assert np.all(np.diff(tg) >= 0.0)
+        state = np.asarray(
+            [bool(tr.start_on[c]) ^ (int(np.sum(tg <= t)) % 2 == 1)
+             for t in ts])
+        got = tr.on_at(np.full(len(ts), c), ts)
+        np.testing.assert_array_equal(state, got)
+
+
+def test_trace_zero_off_fraction_always_on():
+    tr = make_availability_trace(16, 1_000.0, 0.0, seed=0)
+    assert tr.toggles.shape == (0,)
+    assert np.all(tr.start_on)
+    assert np.all(tr.on_at(np.arange(16), np.full(16, 500.0)))
+    with pytest.raises(ValueError, match="off_fraction"):
+        make_availability_trace(4, 100.0, 1.0)
+
+
 # ---------------------------------------------------------------------------
 # Sim-level scenarios
 # ---------------------------------------------------------------------------
@@ -158,24 +247,34 @@ def test_held_slots_redispatch_with_current_version(world):
     the events processed up to then (fedasync: one update per ok receive)."""
     cfg, clients, test, params = world
     pushed = []
-    orig_push = heapq.heappush
+    orig_extend = tl_mod.Timeline.extend_arrays
 
-    def spy_push(h, ev):
-        if isinstance(ev, sim_mod._Event):
-            pushed.append(ev)
-        return orig_push(h, ev)
+    def spy_extend(self, t_done, seqs, cids, versions, oks, snapshots):
+        # the timeline's single insertion choke point: every dispatch —
+        # scalar or batched — passes through here exactly once
+        t = np.asarray(t_done, np.float64)
+        s = np.asarray(seqs, np.int64)
+        c = np.asarray(cids, np.int64)
+        v = np.asarray(versions, np.int64)
+        o = np.asarray(oks, bool)
+        for i in range(s.shape[0]):
+            pushed.append(tl_mod._Event(float(t[i]), int(s[i]), int(c[i]),
+                                        None, int(v[i]), bool(o[i])))
+        return orig_extend(self, t_done, seqs, cids, versions, oks,
+                           snapshots)
 
-    sim_mod.heapq.heappush = spy_push
+    tl_mod.Timeline.extend_arrays = spy_extend
     try:
         r = run_algorithm("fedasync", cfg, params, clients, test,
                           SimConfig(availability_kind="hetero",
                                     dropout_rate=0.35,
                                     engine="sequential", **QUICK))
     finally:
-        sim_mod.heapq.heappush = orig_push
+        tl_mod.Timeline.extend_arrays = orig_extend
     assert r.dropped > 0
     conc = max(1, round(0.2 * QUICK["num_clients"]))
     assert len(pushed) == r.launched
+    pushed.sort(key=lambda e: e.seq)     # launch (dispatch) order
     # replay: events are processed in (t_done, seq) heap order; replacement
     # conc + j is pushed while processing the j-th processed event
     processed = sorted(pushed, key=lambda e: (e.t_done, e.seq))
@@ -219,3 +318,27 @@ def test_dropout_identical_across_engines(world):
     assert seq.receive_log == coh.receive_log
     np.testing.assert_allclose(coh.final_accuracy, seq.final_accuracy,
                                atol=1e-4)
+
+
+def test_trace_runs_drop_and_share_timeline_streams(world):
+    """``availability_kind='trace'`` drops dispatches issued while a client
+    is off — deterministically (two runs agree exactly) — and, because the
+    trace consumes NO RNG, the dispatch cid/latency streams are identical
+    to the dropout-free run's (same client visit order)."""
+    cfg, clients, test, params = world
+    kw = dict(availability_kind="trace", dropout_rate=0.4, **QUICK)
+    a = run_algorithm("fedasync", cfg, params, clients, test,
+                      SimConfig(**kw))
+    b = run_algorithm("fedasync", cfg, params, clients, test,
+                      SimConfig(**kw))
+    assert a.dropped > 0
+    assert a.dropped == b.dropped
+    assert a.receive_log == b.receive_log
+    assert a.final_accuracy == b.final_accuracy
+    # same total launches as the no-dropout run would make over the same
+    # timeline is NOT guaranteed (drops re-dispatch), but the two engines
+    # must agree event-for-event
+    seq = run_algorithm("fedasync", cfg, params, clients, test,
+                        SimConfig(engine="sequential", **kw))
+    assert seq.dropped == a.dropped
+    assert seq.receive_log == a.receive_log

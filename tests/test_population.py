@@ -1,0 +1,285 @@
+"""Population-scale streaming stack: lazy clients + chunked slab store.
+
+Three layers, pinned bottom-up:
+
+* ``SyntheticPopulation`` — per-client rows are a pure function of
+  (population seed, client id), so materialization order, batching, and
+  shard-cache evictions can never change the data a client trains on.
+* ``ClientSlabStore`` — the chunked/streaming ``StackedClients``: gathers
+  must equal the source rows regardless of which path (cached shard vs
+  direct row fetch) serves each member, with LRU residency bounded by
+  ``cache_shards``.
+* The simulator — a population dispatched through the streaming cohort
+  engine reproduces the sequential oracle's digest stream, composes with
+  ``run_sweep`` and synchronous FedAvg, and checkpoint/resume round-trips
+  across shard-cache eviction boundaries.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import (ClientSlabStore, StackedClients, SyntheticPopulation,
+                        skewed_client_sizes)
+from repro.federated import (SimConfig, SweepConfig, run_algorithm,
+                             run_sweep)
+from repro.models import model as M
+
+C = 20
+POP = dict(num_clients=C, num_classes=10, dim=32, seed=3,
+           size_mean=24, size_spread=0.4, size_lo=8, size_hi=40)
+SIM = dict(num_clients=C, horizon=2_500.0, eval_every=1_250.0, seed=0)
+# engine-parity band, matching the golden suite's tolerance
+RTOL, ATOL = 1e-4, 1e-3
+
+
+@pytest.fixture(scope="module")
+def pop():
+    return SyntheticPopulation(**POP)
+
+
+@pytest.fixture(scope="module")
+def pop_world(pop):
+    cfg = get_config("paper-synthetic-mlp")
+    test = pop.test_dataset(512)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, pop, test, params
+
+
+# ---------------------------------------------------------------------------
+# SyntheticPopulation: determinism + structure
+# ---------------------------------------------------------------------------
+
+def test_population_rows_pure_in_client_id(pop):
+    """member_rows is deterministic and order-free: re-materializing (in any
+    batch grouping) yields identical rows — the property that makes shard
+    eviction safe."""
+    cids = np.asarray([0, 7, 13, 19])
+    x1, y1 = pop.member_rows(cids)
+    x2, y2 = pop.member_rows(cids)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    xp, yp = pop.member_rows(cids[::-1])
+    np.testing.assert_array_equal(xp[::-1], x1)
+    np.testing.assert_array_equal(yp[::-1], y1)
+    for i, c in enumerate(cids):                    # singleton == batched
+        xs, ys = pop.member_rows([c])
+        np.testing.assert_array_equal(xs[0], x1[i])
+        np.testing.assert_array_equal(ys[0], y1[i])
+
+
+def test_population_getitem_matches_member_rows(pop):
+    """The sequential oracle's ClientDataset view holds exactly the slab's
+    valid rows (same data reaches both engines)."""
+    for c in (0, 5, C - 1):
+        ds = pop[c]
+        n = int(pop.sizes[c])
+        assert len(ds) == n
+        x, y = pop.member_rows([c])
+        np.testing.assert_array_equal(ds.data.x, x[0, :n])
+        np.testing.assert_array_equal(ds.data.y, y[0, :n])
+        # padding rows past the client's size are zeroed
+        assert not np.any(x[0, n:])
+        assert not np.any(y[0, n:])
+
+
+def test_population_shape_and_skew(pop):
+    assert len(pop) == C
+    assert pop.sizes.shape == (C,)
+    assert pop.sizes.min() >= POP["size_lo"]
+    assert pop.sizes.max() <= POP["size_hi"]
+    assert pop.n_max == int(pop.sizes.max())
+    # label skew: the two dominant classes carry well over uniform mass
+    x, y = pop.member_rows(np.arange(C))
+    valid = np.arange(pop.n_max)[None, :] < pop.sizes[:, None]
+    top2 = 0
+    for c in range(C):
+        counts = np.bincount(y[c][valid[c]], minlength=10)
+        top2 += np.sort(counts)[-2:].sum() / counts.sum()
+    assert top2 / C > 0.45            # vs 0.2 under uniform labels
+    # held-out set is near-uniform and shares the mixture geometry
+    test = pop.test_dataset(2048)
+    frac = np.bincount(test.y, minlength=10) / len(test)
+    assert frac.max() < 0.2
+    assert test.x.shape == (2048, POP["dim"])
+
+
+def test_skewed_client_sizes_validation():
+    s = skewed_client_sizes(1000, mean=64, spread=0.6, lo=16, hi=512, seed=0)
+    assert s.shape == (1000,) and s.min() >= 16 and s.max() <= 512
+    assert np.median(s) < s.mean()    # log-normal right skew
+    with pytest.raises(ValueError):
+        skewed_client_sizes(10, mean=8, lo=16, hi=512)
+
+
+# ---------------------------------------------------------------------------
+# ClientSlabStore: gather correctness + LRU residency
+# ---------------------------------------------------------------------------
+
+def test_slab_store_gather_matches_source(pop):
+    """Every service path — cached shard, fresh shard load, row path, and
+    any mix — returns exactly the source's rows in input order."""
+    store = ClientSlabStore(pop, shard_size=5, cache_shards=2, promote=2)
+    assert store.num_shards == 4
+    for cids in ([0, 1, 17, 6],       # shard0 cached, shards 1/3 row path
+                 [5, 6, 7],           # shard1 promoted
+                 [10, 11, 12, 3, 19],  # shard2 promoted -> evicts shard0
+                 [0, 18]):             # shard0 gone: row path again
+        want_x, want_y = pop.member_rows(cids)
+        got_x, got_y = store.gather(cids)
+        np.testing.assert_array_equal(np.asarray(got_x), want_x)
+        np.testing.assert_array_equal(np.asarray(got_y), want_y)
+    st = store.stats
+    assert st["shard_loads"] == 3 and st["evictions"] == 1
+    assert st["row_fetches"] > 0 and st["hits"] > 0
+    assert st["resident_shards"] <= 2
+
+
+def test_slab_store_lru_keeps_recently_used(pop):
+    store = ClientSlabStore(pop, shard_size=5, cache_shards=2, promote=2)
+    store.gather([0, 1])              # load shard 0
+    store.gather([5, 6])              # load shard 1
+    store.gather([0, 1])              # touch shard 0 (most recent)
+    store.gather([10, 11])            # load shard 2 -> evicts shard 1
+    loads = store.stats["shard_loads"]
+    hits = store.stats["hits"]
+    store.gather([0, 2])              # shard 0 must still be resident
+    assert store.stats["shard_loads"] == loads
+    assert store.stats["hits"] == hits + 2
+    store.gather([5, 6])              # shard 1 was evicted: reload
+    assert store.stats["shard_loads"] == loads + 1
+
+
+def test_slab_store_wraps_dataset_lists(pop):
+    """build() on a plain client-dataset list streams the exact rows the
+    monolithic StackedClients slab would hold."""
+    clients = [pop[c] for c in range(8)]
+    slab = StackedClients.from_datasets(clients)
+    store = ClientSlabStore.build(clients, shard_size=3, cache_shards=2,
+                                  promote=1)
+    cids = [7, 0, 4, 2]
+    x, y = store.gather(cids)
+    np.testing.assert_array_equal(np.asarray(x)[:, :slab.n_max],
+                                  slab.x[cids])
+    np.testing.assert_array_equal(np.asarray(y)[:, :slab.n_max],
+                                  slab.y[cids])
+    auto = ClientSlabStore.build(clients)            # default geometry
+    assert auto.shard_size == len(clients)
+
+
+# ---------------------------------------------------------------------------
+# Simulator composition: engines, sweep, fedavg, checkpoint/resume
+# ---------------------------------------------------------------------------
+
+def test_population_engines_agree(pop_world):
+    """A population dispatched through the streaming cohort engine (forced
+    multi-shard, small cache) reproduces the sequential oracle's per-receive
+    digest stream."""
+    cfg, pop, test, params = pop_world
+    seq = run_algorithm("fedasync", cfg, params, pop, test,
+                        SimConfig(engine="sequential",
+                                  record_trajectory=True, **SIM))
+    coh = run_algorithm("fedasync", cfg, params, pop, test,
+                        SimConfig(engine="cohort", record_trajectory=True,
+                                  shard_size=4, shard_cache=2,
+                                  shard_promote=1, **SIM))
+    assert seq.engine == "sequential" and coh.engine == "cohort"
+    assert coh.cohorts > 0
+    assert coh.dispatches == seq.dispatches
+    np.testing.assert_allclose(np.asarray(coh.digests),
+                               np.asarray(seq.digests), rtol=RTOL, atol=ATOL)
+
+
+def test_population_auto_streaming(pop_world):
+    """Passing a lazy population with shard_size=0 still routes through the
+    streaming engine (a population cannot be monolithically stacked)."""
+    cfg, pop, test, params = pop_world
+    built = []
+    orig = ClientSlabStore.build.__func__
+
+    def spy(cls, datasets, **kw):
+        s = orig(cls, datasets, **kw)
+        built.append(s)
+        return s
+
+    ClientSlabStore.build = classmethod(spy)
+    try:
+        res = run_algorithm("fedasync", cfg, params, pop, test,
+                            SimConfig(engine="cohort", **SIM))
+    finally:
+        ClientSlabStore.build = classmethod(orig)
+    assert built and built[0].source is pop
+    assert res.cohorts > 0 and np.isfinite(res.final_accuracy)
+
+
+def test_population_run_sweep(pop_world):
+    """Sweep lanes ride the streaming engine: lane 0 (default data seed)
+    equals the standalone run, a reseeded lane diverges."""
+    cfg, pop, test, params = pop_world
+    sim = SimConfig(engine="cohort", record_trajectory=True, shard_size=4,
+                    shard_cache=2, shard_promote=1, **SIM)
+    res = run_sweep("fedasync", cfg, params, pop, test, sim,
+                    SweepConfig(data_seeds=[SIM["seed"], 7]))
+    solo = run_algorithm("fedasync", cfg, params, pop, test, sim)
+    np.testing.assert_allclose(np.asarray(res.digests[0]),
+                               np.asarray(solo.digests),
+                               rtol=RTOL, atol=ATOL)
+    # the reseeded lane reshuffles client batches: were the data seed dead,
+    # both lanes would run the identical vmapped program bit-for-bit
+    assert not np.array_equal(np.asarray(res.digests[1]),
+                              np.asarray(res.digests[0]))
+
+
+def test_population_fedavg(pop_world):
+    """The synchronous runner consumes populations too (sizes come from the
+    O(C) metadata array, rows stream per round)."""
+    cfg, pop, test, params = pop_world
+    res = run_algorithm("fedavg", cfg, params, pop, test,
+                        SimConfig(engine="cohort", shard_size=8,
+                                  num_clients=C, horizon=1_500.0,
+                                  eval_every=750.0, seed=0))
+    assert res.versions > 0 and np.isfinite(res.final_accuracy)
+
+
+def _prune_to_mid_run(ckdir, total_dispatches):
+    import shutil
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckdir))
+    mid = [s for s in steps if 0 < s < total_dispatches]
+    assert mid, steps
+    for s in steps:
+        if s > mid[-1]:
+            shutil.rmtree(os.path.join(ckdir, f"step_{s:08d}"))
+
+
+def test_population_checkpoint_resume_across_eviction(pop_world, tmp_path,
+                                                      monkeypatch):
+    """Checkpoint/resume round-trips a streaming-population run whose shard
+    cache (one resident shard, five shards touched) provably cycles through
+    evictions: some shard is re-materialized after being dropped, and the
+    resumed run still reproduces the uninterrupted digest stream."""
+    cfg, pop, test, params = pop_world
+    kw = dict(SIM, record_trajectory=True, engine="cohort", shard_size=4,
+              shard_cache=1, shard_promote=1)
+    loads = []
+    orig = ClientSlabStore._load_shard
+    monkeypatch.setattr(ClientSlabStore, "_load_shard",
+                        lambda self, sid: loads.append(sid) or orig(self, sid))
+    base = run_algorithm("fedasync", cfg, params, pop, test, SimConfig(**kw))
+    # the eviction boundary was genuinely crossed: a shard loaded twice
+    assert len(loads) > len(set(loads)), loads
+    ckdir = str(tmp_path / "pop")
+    ck = run_algorithm("fedasync", cfg, params, pop, test,
+                       SimConfig(checkpoint_dir=ckdir,
+                                 checkpoint_every=800.0, **kw))
+    np.testing.assert_array_equal(np.asarray(ck.digests),
+                                  np.asarray(base.digests))
+    _prune_to_mid_run(ckdir, base.dispatches)
+    res = run_algorithm("fedasync", cfg, params, pop, test,
+                        SimConfig(checkpoint_dir=ckdir,
+                                  checkpoint_every=800.0, resume=True, **kw))
+    np.testing.assert_array_equal(np.asarray(res.digests),
+                                  np.asarray(base.digests))
+    assert res.dispatches == base.dispatches
+    assert res.launched == base.launched
