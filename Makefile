@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-multidevice golden golden-regen golden-check \
-	bench-smoke bench bench-sim bench-sweep bench-pop
+	bench-smoke bench bench-sim bench-sweep bench-pop bench-sched
 
 test:
 	$(PY) -m pytest -x -q
@@ -65,6 +65,15 @@ bench-sweep:
 # C). Narrow with POP_BENCH_PRESETS=pop-smoke for the CI cell.
 bench-pop:
 	$(PY) -m benchmarks.population_throughput
+
+# Scheduler x staleness-metric operating points: every dispatch scheduler x
+# asyncfeded distance metric x concurrency x tolerance cell as seed-lane
+# sweeps on the paper protocol, with a FedPSA AULC baseline per
+# (scheduler, concurrency); writes
+# artifacts/bench/BENCH_sched_staleness.json. Narrow with
+# SCHED_BENCH_PRESET=sched-smoke for the CI cell.
+bench-sched:
+	$(PY) -m benchmarks.sched_staleness
 
 bench:
 	$(PY) -m benchmarks.run

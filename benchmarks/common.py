@@ -99,6 +99,16 @@ def sweep_cell(alg: str, alpha: float, sweep: SweepConfig, *,
     return res
 
 
+def aulc_json(value):
+    """JSON-safe AULC table cell: ``SimResult.aulc`` reports NaN when a run
+    recorded fewer than two eval points (no area to integrate), and
+    ``json.dump`` would emit bare ``NaN`` — invalid JSON that many readers
+    coerce to 0 or reject. Surface it as ``None`` (JSON ``null``) so a
+    missing curve can never masquerade as a zero-accuracy result."""
+    v = float(value)
+    return v if np.isfinite(v) else None
+
+
 def save(name: str, payload: dict):
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, name + ".json")

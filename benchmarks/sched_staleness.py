@@ -1,0 +1,144 @@
+"""Scheduler x staleness-metric operating points (ROADMAP research surface).
+
+The staleness-vs-update-frequency study: every combination of dispatch
+scheduler (``federated.scheduler.SCHEDULERS``), asyncfeded distance metric
+(``core.psa.DISTANCE_METRICS``), concurrency and tolerance (mixing alpha)
+gets an AULC cell on the paper protocol (Dirichlet hardest setting), each
+backed by seed lanes, with FedPSA as the per-(scheduler, concurrency)
+baseline to beat.
+
+Cost model: per (scheduler, concurrency) the whole metric x alpha x seed
+grid for the traced metrics (l2/cosine — ``dist_mode`` is a lane
+hyperparameter) runs as ONE ``run_sweep`` over a shared timeline; the
+sketch metric changes the compiled step (structural) and the FedPSA
+baseline is a different policy, so each adds one more sweep. 3 sweeps per
+(scheduler, concurrency) pair regardless of grid width.
+
+Grid preset via ``SCHED_BENCH_PRESET`` (default ``sched-paper``;
+``sched-smoke`` is the tier-1 CI cell). Output:
+``artifacts/bench/BENCH_sched_staleness.json``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_sched_preset
+from repro.federated import SweepConfig
+
+PRESET = os.environ.get("SCHED_BENCH_PRESET", "sched-paper")
+
+
+def _lane_mean_aulc(res, lane_groups):
+    """Mean AULC over each group of lane indices (NaN-safe: a short curve
+    poisons its group to NaN, surfaced as null — never a fake 0.0)."""
+    aulcs = res.aulc
+    return {key: common.aulc_json(np.mean([aulcs[i] for i in idx]))
+            for key, idx in lane_groups.items()}
+
+
+def main(argv=None):
+    p = get_sched_preset(PRESET)
+    traced = [m for m in p.metrics if m != "sketch"]
+    rows = {}
+    detail = {}
+    t_start = time.time()
+    for sched in p.schedulers:
+        for conc in p.concurrencies:
+            tag = f"{sched}@c{conc}"
+            sim = common.sim_config(concurrency=conc, scheduler=sched)
+
+            if traced:
+                lanes = [(m, a, s) for m in traced for a in p.alphas
+                         for s in p.seeds]
+                sweep = SweepConfig(
+                    model_seeds=[s for _, _, s in lanes],
+                    data_seeds=[s for _, _, s in lanes],
+                    policy_params=[dict(alpha=a, dist_mode=m)
+                                   for m, a, _ in lanes])
+                res = common.sweep_cell("asyncfeded", p.dirichlet_alpha,
+                                        sweep, sim=sim)
+                groups = {}
+                for i, (m, a, _) in enumerate(lanes):
+                    groups.setdefault(f"{sched}/{m}@c{conc}/tol{a}",
+                                      []).append(i)
+                cell = _lane_mean_aulc(res, groups)
+                rows.update(cell)
+                detail[f"{tag}/traced"] = {
+                    "lanes": [f"{m}/tol{a}/seed{s}" for m, a, s in lanes],
+                    "aulc": [common.aulc_json(v) for v in res.aulc],
+                    "launched": res.launched, "wall_s": res.wall_s}
+
+            if "sketch" in p.metrics:
+                lanes = [(a, s) for a in p.alphas for s in p.seeds]
+                sweep = SweepConfig(
+                    model_seeds=[s for _, s in lanes],
+                    data_seeds=[s for _, s in lanes],
+                    policy_params=[dict(alpha=a) for a, _ in lanes])
+                res = common.sweep_cell("asyncfeded", p.dirichlet_alpha,
+                                        sweep, sim=sim,
+                                        server_kwargs=dict(metric="sketch"))
+                groups = {}
+                for i, (a, _) in enumerate(lanes):
+                    groups.setdefault(f"{sched}/sketch@c{conc}/tol{a}",
+                                      []).append(i)
+                rows.update(_lane_mean_aulc(res, groups))
+                detail[f"{tag}/sketch"] = {
+                    "lanes": [f"sketch/tol{a}/seed{s}" for a, s in lanes],
+                    "aulc": [common.aulc_json(v) for v in res.aulc],
+                    "launched": res.launched, "wall_s": res.wall_s}
+
+            # the baseline every combination is measured against
+            sweep = SweepConfig(model_seeds=list(p.seeds),
+                                data_seeds=list(p.seeds))
+            res = common.sweep_cell("fedpsa", p.dirichlet_alpha, sweep,
+                                    sim=sim)
+            base_key = f"{sched}/fedpsa@c{conc}"
+            rows[base_key] = common.aulc_json(np.mean(res.aulc))
+            detail[f"{tag}/fedpsa"] = {
+                "aulc": [common.aulc_json(v) for v in res.aulc],
+                "launched": res.launched, "wall_s": res.wall_s}
+            for k in sorted(cellk for cellk in rows
+                            if cellk.startswith(f"{sched}/")
+                            and f"@c{conc}" in cellk):
+                print(f"sched,{k},{rows[k]}")
+
+    # headline: the best operating point per scheduler vs FedPSA under the
+    # same scheduler/concurrency (the ROADMAP deliverable question)
+    summary = {}
+    for sched in p.schedulers:
+        pts = [(v, k) for k, v in rows.items()
+               if k.startswith(f"{sched}/") and "fedpsa" not in k
+               and v is not None]
+        if not pts:
+            continue
+        best_v, best_k = max(pts)
+        conc = best_k.split("@c")[1].split("/")[0]
+        base = rows.get(f"{sched}/fedpsa@c{conc}")
+        summary[sched] = {"best": best_k, "aulc": best_v,
+                          "fedpsa_aulc": base,
+                          "beats_fedpsa": (base is not None
+                                           and best_v > base)}
+        print(f"sched,best[{sched}],{best_k},{best_v},"
+              f"beats_fedpsa={summary[sched]['beats_fedpsa']}")
+
+    payload = {"preset": PRESET, "horizon": common.HORIZON,
+               "grid": {"schedulers": list(p.schedulers),
+                        "metrics": list(p.metrics),
+                        "concurrencies": list(p.concurrencies),
+                        "tolerances": list(p.alphas),
+                        "seeds": list(p.seeds),
+                        "dirichlet_alpha": p.dirichlet_alpha},
+               "aulc": rows, "summary": summary, "detail": detail,
+               "wall_s": time.time() - t_start}
+    path = common.save("BENCH_sched_staleness", payload)
+    print(f"sched,saved,{path},wall_s={payload['wall_s']:.1f}")
+    return payload
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

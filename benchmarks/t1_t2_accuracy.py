@@ -75,9 +75,9 @@ def main(argv=None):
                                  axis=0).tolist()
             curves[f"{alg}@a{alpha}"] = {
                 "times": list(times)[:n], "accuracies": mean_curve,
-                "aulc": float(np.mean(aulcs)),
+                "aulc": common.aulc_json(np.mean(aulcs)),
                 "per_seed": {"seeds": list(SEEDS), "final": accs,
-                             "aulc": list(aulcs)},
+                             "aulc": [common.aulc_json(a) for a in aulcs]},
             }
             print(f"t1_t2,{alg},alpha={alpha},{mean:.4f}±{std:.4f}")
     common.save("t1_t2_accuracy", rows)

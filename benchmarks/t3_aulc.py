@@ -27,13 +27,16 @@ def main(argv=None):
         # Same convention as SimResult.aulc: normalize by the run's actual
         # span, so the number is mean accuracy over the run regardless of
         # horizon.
+        # (NaN, surfaced as JSON null — not a fake 0.0 — when the curve is
+        # too short to integrate, matching SimResult.aulc)
         span = float(t[-1] - t[0]) if len(t) > 1 else 0.0
-        aulc = float(np.trapezoid(a, t) / span) if span > 0.0 else 0.0
-        rows[name] = aulc
+        aulc = float(np.trapezoid(a, t) / span) if span > 0.0 else float("nan")
+        rows[name] = common.aulc_json(aulc)
         print(f"t3,{name},{aulc:.4f}")
     common.save("t3_aulc", rows)
     # the paper's claim: FedPSA has the best AULC on the hardest setting
-    best = max((v, k) for k, v in rows.items() if k.endswith("@a0.1"))
+    best = max((v, k) for k, v in rows.items()
+               if k.endswith("@a0.1") and v is not None)
     print(f"t3,best_aulc_a0.1,{best[1]}")
     return rows
 

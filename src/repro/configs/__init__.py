@@ -11,6 +11,8 @@ from typing import Callable, Dict
 from repro.models.config import ModelConfig
 from repro.configs.population import (PopulationPreset, POPULATION_PRESETS,
                                       get_population_preset)
+from repro.configs.sched import (SchedBenchPreset, SCHED_PRESETS,
+                                 get_sched_preset)
 
 _ARCH_MODULES = {
     "xlstm-350m": "repro.configs.xlstm_350m",

@@ -246,3 +246,90 @@ def server_step(state: PSAState, global_vec: jnp.ndarray,
 
     return jax.lax.cond(buffer_full(state), do_aggregate, no_aggregate,
                         state, global_vec)
+
+
+# ---------------------------------------------------------------------------
+# Distance-metric staleness family (generalizing AsyncFedED's Euclidean
+# drift; the metric taxonomy of "Revisiting Gradient Staleness")
+# ---------------------------------------------------------------------------
+
+DISTANCE_METRICS = ("l2", "cosine", "sketch")
+
+# Traced ``PolicyParams.dist_mode`` codes for the arithmetic variants: l2 and
+# cosine differ only in scalar math over the same d-contractions, so the
+# metric can be selected by a traced scalar and swept per lane. "sketch"
+# adds k extra contractions to the program and is a STRUCTURAL policy key.
+DIST_MODE_L2 = 0.0
+DIST_MODE_COSINE = 1.0
+
+
+def distance_staleness_scale(global_vec: jnp.ndarray, wi: jnp.ndarray,
+                             dw: jnp.ndarray, *, alpha, eps, dist_mode):
+    """AsyncFedED-family mixing coefficient s for  w <- w + s * dw, with the
+    staleness metric selected by the traced scalar ``dist_mode``:
+
+    l2 (``dist_mode=0``):  s = alpha * min(1, ||dw|| / (||w_i - w|| + eps))
+        — the original AsyncFedED rule, bit-identical arithmetic to the
+        pre-family ``asyncfeded`` step (golden streams are pinned to it).
+    cosine (``dist_mode=1``):
+        s = alpha * 0.5 * (1 + <dw, w_i - w> / (||dw||*||w_i - w|| + eps))
+        — direction-only staleness: a client whose drift still points along
+        its update gets the full alpha; an orthogonal or opposed drift is
+        damped toward 0 regardless of magnitude.
+
+    Every d-contraction goes through ``sharding.param_axis_sum``, so the
+    same expression psums per-shard partials under the sharded server's
+    shard_map (scalar-psum contract: only (1,)-sized values cross shards).
+    """
+    drift = wi - global_vec
+    dist = jnp.sqrt(sharding.param_axis_sum(jnp.square(drift)))
+    norm = jnp.sqrt(sharding.param_axis_sum(jnp.square(dw)))
+    s_l2 = jnp.minimum(1.0, norm / (dist + eps))
+    dot = sharding.param_axis_sum(dw * drift)
+    s_cos = 0.5 * (1.0 + dot / (norm * dist + eps))
+    return alpha * jnp.where(dist_mode < 0.5, s_l2, s_cos)
+
+
+def magnitude_sketch(vec: jnp.ndarray, *, k: int, seed: int) -> jnp.ndarray:
+    """(k,) JL magnitude sketch  z = R|vec| / sqrt(k)  with the SAME
+    Rademacher hash as the fused sensitivity kernel, so ||z|| estimates
+    ||vec||_2 (||R|v|||  ~=  |||v|||_2  =  ||v||_2 by Johnson-Lindenstrauss).
+
+    Single-device: routes through the Pallas ``sens_sketch`` kernel with
+    (g=1, F=0), under which the Eq. 8 sensitivity |g*theta - 0.5*F*theta^2|
+    degenerates to exactly |vec| — the kernel's streaming one-pass HBM
+    profile for free. Under a ``sharding.param_axis`` trace the kernel's
+    static ``index_offset`` cannot follow the traced shard index, so the
+    rows are hashed in-trace at GLOBAL indices (bit-identical ``pcg_hash``)
+    and each row reduces through one scalar psum — k scalars total, keeping
+    the sharded step's scalar-psum contract.
+    """
+    ax = sharding.current_param_axis()
+    if ax is None:
+        from repro.kernels import ops  # deferred: avoids import cycle at pkg init
+        return ops.sens_sketch(vec, jnp.ones_like(vec), jnp.zeros_like(vec),
+                               k=k, seed=seed)
+    d_local = vec.shape[0]
+    off = jax.lax.axis_index(ax).astype(jnp.uint32) * jnp.uint32(d_local)
+    lin = off + jnp.arange(d_local, dtype=jnp.uint32)
+    s = jnp.abs(vec.astype(jnp.float32))
+    rows = [sharding.param_axis_sum(s * sketch.rademacher_row(
+        jnp.uint32(seed), lin, r, k)) for r in range(k)]
+    return jnp.stack(rows) / jnp.sqrt(jnp.float32(k))
+
+
+def sketch_distance_scale(global_vec: jnp.ndarray, wi: jnp.ndarray,
+                          dw: jnp.ndarray, *, alpha, eps, k: int,
+                          seed: int) -> jnp.ndarray:
+    """The l2 rule evaluated in k-dim sketch space:
+
+        s = alpha * min(1, ||R|dw||| / (||R|w_i - w||| + eps))
+
+    a JL estimate of the l2 ratio at O(k) cross-shard traffic instead of
+    exact norms — the "sketch" member of ``DISTANCE_METRICS``, sharing the
+    paper's compressed-staleness machinery with FedPSA."""
+    z_dw = magnitude_sketch(dw, k=k, seed=seed)
+    z_drift = magnitude_sketch(wi - global_vec, k=k, seed=seed)
+    norm = jnp.sqrt(jnp.sum(jnp.square(z_dw)))
+    dist = jnp.sqrt(jnp.sum(jnp.square(z_drift)))
+    return alpha * jnp.minimum(1.0, norm / (dist + eps))

@@ -27,6 +27,11 @@ from repro.federated.policies import (
     make_policy,
     POLICY_NAMES,
 )
+from repro.federated.scheduler import (SCHEDULERS, Dispatcher, Scheduler,
+                                       PeriodTriggeredScheduler,
+                                       StalenessAwareScheduler,
+                                       UniformRefillScheduler,
+                                       make_scheduler, make_streams)
 from repro.federated.legacy import make_legacy_server
 from repro.federated.client import local_update
 from repro.federated.latency import (AvailabilityTrace,

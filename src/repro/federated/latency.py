@@ -25,7 +25,10 @@ RNG streams: one base seed fans out into decorrelated sub-streams via
 ``_subseed`` — stream 0 the per-client latency means, stream 1 the
 per-dispatch jitter, stream 2 the availability probabilities, stream 3 the
 per-dispatch availability Bernoulli draws (owned by the simulator), stream
-4 the synthetic availability traces. Distinct streams must never share an
+4 the synthetic availability traces, stream 5 the synchronous fedavg round
+sampling (``run_fedavg`` used to draw its per-round client choice from the
+bare dispatch stream, which made the sync and async paths perturb each
+other's draws at equal base seeds). Distinct streams must never share an
 MT19937 state: the probabilities used to seed ad hoc as ``seed + 0x5EED``,
 which collides with the latency sub-streams for adversarially chosen seeds.
 """
@@ -46,6 +49,7 @@ STREAM_JITTER = 1
 STREAM_AVAILABILITY = 2
 STREAM_AVAIL_DRAWS = 3
 STREAM_TRACE = 4
+STREAM_SYNC_CHOICE = 5
 
 
 class LatencySampler:

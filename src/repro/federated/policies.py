@@ -65,11 +65,19 @@ class PolicyParams(NamedTuple):
     delta: jnp.ndarray = None            # fedpsa temperature floor
     eps: jnp.ndarray = None              # asyncfeded distance epsilon
     use_thermometer: jnp.ndarray = None  # fedpsa w/o-T ablation switch
+    dist_mode: jnp.ndarray = None        # asyncfeded metric (0=l2, 1=cosine)
 
 
 HYPER_DEFAULTS = dict(alpha=0.6, a=0.5, server_lr=1.0, beta=0.5, gamma=5.0,
-                      delta=0.5, eps=1e-8, use_thermometer=True)
+                      delta=0.5, eps=1e-8, use_thermometer=True,
+                      dist_mode=psa_lib.DIST_MODE_L2)
 HYPER_FIELDS = PolicyParams._fields
+
+# Metric-name aliases accepted for ``dist_mode`` (the arithmetic variants);
+# "sketch" changes the traced program and is a structural policy choice, not
+# a per-lane value — ``asyncfeded_policy(metric="sketch")`` builds it.
+_DIST_MODE_CODES = {"l2": psa_lib.DIST_MODE_L2,
+                    "cosine": psa_lib.DIST_MODE_COSINE}
 
 
 def make_hyper(**kw) -> PolicyParams:
@@ -77,6 +85,7 @@ def make_hyper(**kw) -> PolicyParams:
 
     Raises on unknown keys — in particular on shape-determining parameters
     (buffer_size, queue_len, sketch_k), which cannot vary per lane.
+    ``dist_mode`` also accepts the metric names "l2"/"cosine".
     """
     bad = sorted(set(kw) - set(HYPER_FIELDS))
     if bad:
@@ -86,6 +95,15 @@ def make_hyper(**kw) -> PolicyParams:
             f"queue_len/sketch_k are static and must be shared)")
     vals = dict(HYPER_DEFAULTS)
     vals.update(kw)
+    if isinstance(vals["dist_mode"], str):
+        try:
+            vals["dist_mode"] = _DIST_MODE_CODES[vals["dist_mode"]]
+        except KeyError:
+            raise ValueError(
+                f"dist_mode {vals['dist_mode']!r} is not a traced metric; "
+                f"traced: {sorted(_DIST_MODE_CODES)} ('sketch' alters the "
+                f"program — request it via asyncfeded_policy(metric="
+                f"'sketch'))") from None
     return PolicyParams(**{
         k: (jnp.asarray(bool(v)) if k == "use_thermometer"
             else jnp.float32(v)) for k, v in vals.items()})
@@ -270,40 +288,78 @@ def fedasync_policy(spec: tu.FlatSpec, alpha: float = 0.6,
 
 
 def asyncfeded_policy(spec: tu.FlatSpec, alpha: float = 0.6,
-                      eps: float = 1e-8) -> Policy:
-    """AsyncFedED-style Euclidean-distance staleness: instead of the version
-    gap tau, staleness is measured in parameter space as the distance between
-    the current global model and the returning client model. The applied
-    server step is  w <- w + s * dw  with
+                      eps: float = 1e-8, metric: str = "l2",
+                      sketch_k: int = 16, sketch_seed: int = 42) -> Policy:
+    """AsyncFedED-style distance-metric staleness family: instead of the
+    version gap tau, staleness is measured in parameter space between the
+    current global model and the returning client model, and the applied
+    server step is  w <- w + s * dw.
 
-        s = alpha * min(1, ||dw|| / (||w_i - w|| + eps)),
+    ``metric`` selects the member (``core.psa.DISTANCE_METRICS``):
 
-    i.e. a fresh client (w_i - w ~ dw) gets the full alpha while a client
-    whose base model has drifted far from the current global is damped by
-    exactly its relative drift. One-function variant proving the policy
-    interface is pluggable."""
+    - "l2" (default, the original AsyncFedED rule — golden streams pin it):
+      s = alpha * min(1, ||dw|| / (||w_i - w|| + eps)); a fresh client
+      (w_i - w ~ dw) gets the full alpha, a drifted one is damped by its
+      relative drift.
+    - "cosine": direction-only damping,
+      s = alpha * (1 + cos(dw, w_i - w)) / 2.
+    - "sketch": the l2 rule on k-dim JL magnitude sketches (the paper's
+      compressed-staleness machinery; ``sens_sketch`` kernel single-device,
+      k scalar psums sharded).
+
+    l2/cosine share ONE compiled step — the metric is the traced
+    ``hyper.dist_mode`` scalar, so it can vary per sweep lane. "sketch"
+    adds contractions to the program and keys its own compiled step
+    (``sketch_k``/``sketch_seed`` static).
+    """
+    if metric not in psa_lib.DISTANCE_METRICS:
+        raise ValueError(f"unknown distance metric {metric!r}; known: "
+                         f"{psa_lib.DISTANCE_METRICS}")
+
+    if metric == "sketch":
+        def build():
+            def step(state: ServerState, arr: Arrival):
+                h = state.hyper
+                dw = spec.flatten(arr.update)
+                wi = spec.flatten(arr.client_params)
+                s = psa_lib.sketch_distance_scale(
+                    state.params, wi, dw, alpha=h.alpha, eps=h.eps,
+                    k=sketch_k, seed=sketch_seed)
+                state = state._replace(params=state.params + s * dw,
+                                       version=state.version + 1)
+                return state, make_info(0, updated=True, mix=s)
+            return step
+
+        raw, jitted = _shared_steps(
+            ("asyncfeded", spec, "sketch", sketch_k, sketch_seed), build)
+        return Policy(name="asyncfeded",
+                      init=_base_init(spec, make_hyper(alpha=alpha, eps=eps)),
+                      step=jitted, raw_step=raw, spec=spec, log_fn=_log_mix,
+                      hyper_defaults=(("alpha", alpha), ("eps", eps)))
 
     def build():
         def step(state: ServerState, arr: Arrival):
             h = state.hyper
             dw = spec.flatten(arr.update)
             wi = spec.flatten(arr.client_params)
-            # param_axis_sum: these d-contractions psum across shards when
-            # the step is traced under the sharded server's shard_map
-            dist = jnp.sqrt(
-                sharding.param_axis_sum(jnp.square(wi - state.params)))
-            norm = jnp.sqrt(sharding.param_axis_sum(jnp.square(dw)))
-            s = h.alpha * jnp.minimum(1.0, norm / (dist + h.eps))
+            # d-contractions inside psum across shards when the step is
+            # traced under the sharded server's shard_map
+            s = psa_lib.distance_staleness_scale(
+                state.params, wi, dw, alpha=h.alpha, eps=h.eps,
+                dist_mode=h.dist_mode)
             state = state._replace(params=state.params + s * dw,
                                    version=state.version + 1)
             return state, make_info(0, updated=True, mix=s)
         return step
 
     raw, jitted = _shared_steps(("asyncfeded", spec), build)
+    dist_mode = _DIST_MODE_CODES[metric]
     return Policy(name="asyncfeded",
-                  init=_base_init(spec, make_hyper(alpha=alpha, eps=eps)),
+                  init=_base_init(spec, make_hyper(alpha=alpha, eps=eps,
+                                                   dist_mode=dist_mode)),
                   step=jitted, raw_step=raw, spec=spec, log_fn=_log_mix,
-                  hyper_defaults=(("alpha", alpha), ("eps", eps)))
+                  hyper_defaults=(("alpha", alpha), ("eps", eps),
+                                  ("dist_mode", dist_mode)))
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,12 @@ run under ``shard_map`` with every ``(…, d)`` tensor of ``ServerState``
 partitioned over the mesh's flat-parameter axis (see
 ``server_state_specs`` for the layout contract) and only scalar reductions
 crossing shards via ``psum`` (``common.sharding.param_axis_sum``).
+
+Policy keyword arguments flow through ``make_server``/``make_lane_server``
+``**kw`` to the policy factory — e.g. ``metric="cosine"``/``"sketch"``
+selects the asyncfeded distance-staleness variant (the traced l2/cosine
+``dist_mode`` may instead vary per sweep lane via the lane hyper dicts; see
+``core.psa.DISTANCE_METRICS``).
 """
 from __future__ import annotations
 

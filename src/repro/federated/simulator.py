@@ -45,10 +45,8 @@ from repro.data.loader import ClientDataset, ClientSlabStore, StackedClients
 from repro.federated import client as client_lib
 from repro.federated import servers as servers_lib
 from repro.federated.cohort import CohortEngine, StreamingCohortEngine
-from repro.federated.latency import (STREAM_AVAIL_DRAWS, _subseed,
-                                     make_availability_trace,
-                                     per_client_availability,
-                                     per_client_latency)
+from repro.federated.latency import STREAM_SYNC_CHOICE, _subseed
+from repro.federated.scheduler import Dispatcher, make_scheduler, make_streams
 from repro.federated.timeline import Timeline, _Event
 from repro.models import model as model_lib
 from repro.models import registry
@@ -106,6 +104,14 @@ class SimConfig:
     latency_hi: float = 500.0
     availability_kind: str = "always"  # see latency.per_client_availability
     dropout_rate: float = 0.0          # per-dispatch failure rate when enabled
+    # Dispatch policy — who to dispatch and when a freed slot relaunches
+    # (federated.scheduler): "uniform" (historical immediate-refill rule,
+    # golden-pinned), "period" (FLGo-style period-triggered sampling),
+    # "staleness" (CSMAAFL-style utility/staleness-weighted selection).
+    # ``scheduler_params`` passes scheduler keyword overrides (e.g.
+    # {"period": 40.0} or {"staleness_weight": 2.0}).
+    scheduler: str = "uniform"
+    scheduler_params: Optional[dict] = None
     seed: int = 0
     # The seed is split along the sweep-lane contract: ``timeline_seed``
     # drives everything that shapes the EVENT TIMELINE (latency draws,
@@ -170,14 +176,18 @@ class SimResult:
     def aulc(self) -> float:
         """Area under the learning curve normalized by the run's actual
         time span, so the unit (mean accuracy over the run) is comparable
-        across horizons — matching the paper's Table 3 convention."""
+        across horizons — matching the paper's Table 3 convention.
+
+        NaN (not 0.0) when the curve has fewer than two points or spans no
+        time (e.g. ``eval_every`` > horizon): there is no area to report,
+        and a silent zero would poison AULC comparison tables."""
         if len(self.times) < 2:
-            return 0.0
+            return float("nan")
         t = np.asarray(self.times)
         a = np.asarray(self.accuracies)
         span = float(t[-1] - t[0])
         if span <= 0.0:
-            return 0.0
+            return float("nan")
         return float(np.trapezoid(a, t) / span)
 
 
@@ -647,25 +657,17 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
     """Run one asynchronous algorithm to the virtual-time horizon."""
     engine = _resolve_engine(sim, cfg)
     batched = engine == "cohort"
-    tseed = _timeline_seed(sim)
-    rng = np.random.RandomState(tseed)
-    latency, lat_means = per_client_latency(
-        sim.latency_kind, sim.latency_lo, sim.latency_hi, sim.num_clients,
-        tseed)
-    avail = per_client_availability(sim.availability_kind, sim.dropout_rate,
-                                    sim.num_clients, tseed,
-                                    latency_means=lat_means)
-    # The availability Bernoulli draws live on their OWN RNG stream (not the
-    # dispatch stream): batched dispatch draws all cids then all oks, which
-    # on a shared stream would diverge from the scalar interleaving. The
-    # trace kind replays a deterministic schedule and consumes no RNG.
-    avail_rng = np.random.RandomState(_subseed(tseed, STREAM_AVAIL_DRAWS))
-    use_trace = sim.availability_kind == "trace" and sim.dropout_rate > 0.0
-    trace = (make_availability_trace(sim.num_clients, sim.horizon,
-                                     sim.dropout_rate, tseed)
-             if use_trace else None)
-    use_avail = (sim.availability_kind not in ("always", "trace")
-                 and sim.dropout_rate > 0.0)
+    # One SimStreams bundle replaces the per-run RNG plumbing: the dispatch
+    # stream (client sampling, owned by the scheduler), the latency jitter
+    # stream, and the availability Bernoulli stream are decorrelated
+    # sub-streams (see latency._subseed / scheduler.make_streams).
+    streams = make_streams(sim)
+    scheduler = make_scheduler(sim)
+    if sim.checkpoint_dir and not scheduler.stateless:
+        raise ValueError(
+            f"scheduler {scheduler.name!r} keeps host-side state beyond its "
+            f"RNG and cannot be checkpointed; drop checkpoint_dir or use a "
+            f"stateless scheduler")
     sketch_fn = None
     if server_name == "fedpsa":
         psa_cfg = psa_cfg or psa_lib.PSAConfig()
@@ -683,49 +685,19 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
     result = SimResult(engine=engine)
     concurrency = max(1, int(round(sim.concurrency * sim.num_clients)))
     timeline = Timeline()
-    seq = 0
     data_sizes = _data_sizes(client_datasets)
-
-    def dispatch_many(ts, snaps=None, versions=None):
-        """Issue a batch of dispatches as ONE run insertion: vectorized
-        client sampling, latency and availability draws. Stream-identical
-        to n scalar dispatches (numpy's legacy array fills consume the MT
-        state exactly as n scalar calls; cid/jitter/ok live on separate
-        streams so batching one does not reorder another)."""
-        nonlocal seq
-        n = len(ts)
-        ts = np.asarray(ts, np.float64)
-        cids = rng.randint(sim.num_clients, size=n)
-        t_done = ts + latency.sample_for(cids)
-        if use_trace:
-            oks = trace.on_at(cids, ts)
-        elif use_avail:
-            oks = avail_rng.rand(n) < avail[cids]
-        else:
-            oks = np.ones(n, bool)
-        if snaps is None:
-            cur = server.flat_params if batched else server.params
-            snaps = [cur] * n
-        if versions is None:
-            versions = np.full(n, server.version, np.int64)
-        timeline.extend_arrays(t_done, np.arange(seq, seq + n), cids,
-                               versions, oks, snaps)
-        seq += n
-        result.launched += n
-
-    def dispatch(t: float, snap=None, version=None):
-        dispatch_many([t], None if snap is None else [snap],
-                      None if version is None else [version])
+    dispatcher = Dispatcher(sim, streams, scheduler, timeline, server,
+                            result, batched=batched, data_sizes=data_sizes)
 
     t0 = next_eval0 = 0.0
     resumed = None
     if sim.checkpoint_dir and sim.resume:
-        resumed = _ckpt_restore(sim, server, rng, latency, avail_rng,
-                                timeline, result, batched)
+        resumed = _ckpt_restore(sim, server, streams.rng, streams.latency,
+                                streams.avail_rng, timeline, result, batched)
     if resumed is None:
-        dispatch_many(np.zeros(concurrency))
+        dispatcher.dispatch_many(np.zeros(concurrency))
     else:
-        t0, next_eval0, seq = resumed
+        t0, next_eval0, dispatcher.seq = resumed
 
     ckpt = None
     if sim.checkpoint_dir and sim.checkpoint_every > 0:
@@ -735,20 +707,22 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
         def ckpt(timeline_, t_, next_eval_):
             if t_ < nxt[0]:
                 return
-            _ckpt_save(sim, server, rng, latency, avail_rng, timeline_,
-                       result, t_, next_eval_, seq)
+            _ckpt_save(sim, server, streams.rng, streams.latency,
+                       streams.avail_rng, timeline_, result, t_, next_eval_,
+                       dispatcher.seq)
             while nxt[0] <= t_:
                 nxt[0] += sim.checkpoint_every
 
     if batched:
         t = _drain_cohort(server, cfg, init_params, client_datasets, sim,
-                          dispatch_many, timeline, evaluate, result,
-                          data_sizes, align, psa_cfg, calib_batch,
+                          dispatcher.dispatch_many, timeline, evaluate,
+                          result, data_sizes, align, psa_cfg, calib_batch,
                           receive_hook, digest_fn, t0=t0,
                           next_eval0=next_eval0, ckpt=ckpt)
     else:
-        t = _drain_sequential(server, cfg, client_datasets, sim, dispatch,
-                              timeline, evaluate, result, data_sizes, align,
+        t = _drain_sequential(server, cfg, client_datasets, sim,
+                              dispatcher.dispatch, timeline, evaluate,
+                              result, data_sizes, align,
                               sketch_fn, receive_hook, digest_fn,
                               t0=t0, next_eval0=next_eval0, ckpt=ckpt)
 
@@ -965,7 +939,8 @@ class SweepConfig:
       .seed`` for every lane when None),
     * ``policy_params`` — per-lane dicts of timeline-preserving policy
       hyperparameters (``federated.policies.PolicyParams`` field names:
-      alpha, a, server_lr, beta, gamma, delta, eps, use_thermometer).
+      alpha, a, server_lr, beta, gamma, delta, eps, use_thermometer,
+      dist_mode — the asyncfeded l2/cosine metric, "l2"/"cosine" accepted).
 
     Shape-determining parameters (buffer_size, queue_len, sketch_k,
     num_clients) and the client sketch program (use_sensitivity) are
@@ -1073,21 +1048,8 @@ def run_sweep(server_name: str, cfg: ModelConfig, init_params,
         params_lanes = [model_lib.init_params(jax.random.PRNGKey(int(s)), cfg)
                         for s in model_seeds]
 
-    tseed = _timeline_seed(sim)
-    rng = np.random.RandomState(tseed)
-    latency, lat_means = per_client_latency(
-        sim.latency_kind, sim.latency_lo, sim.latency_hi, sim.num_clients,
-        tseed)
-    avail = per_client_availability(sim.availability_kind, sim.dropout_rate,
-                                    sim.num_clients, tseed,
-                                    latency_means=lat_means)
-    avail_rng = np.random.RandomState(_subseed(tseed, STREAM_AVAIL_DRAWS))
-    use_trace = sim.availability_kind == "trace" and sim.dropout_rate > 0.0
-    trace = (make_availability_trace(sim.num_clients, sim.horizon,
-                                     sim.dropout_rate, tseed)
-             if use_trace else None)
-    use_avail = (sim.availability_kind not in ("always", "trace")
-                 and sim.dropout_rate > 0.0)
+    streams = make_streams(sim)
+    scheduler = make_scheduler(sim)
     sketch_fn = None
     if server_name == "fedpsa":
         psa_cfg = psa_cfg or psa_lib.PSAConfig()
@@ -1106,35 +1068,19 @@ def run_sweep(server_name: str, cfg: ModelConfig, init_params,
                          digests=[[] for _ in range(S)])
     concurrency = max(1, int(round(sim.concurrency * sim.num_clients)))
     timeline = Timeline()
-    seq = 0
     data_sizes = _data_sizes(client_datasets)
 
-    def dispatch_many(ts, snaps=None, versions=None):
-        nonlocal seq
-        n = len(ts)
-        ts = np.asarray(ts, np.float64)
-        cids = rng.randint(sim.num_clients, size=n)
-        t_done = ts + latency.sample_for(cids)
-        if use_trace:
-            oks = trace.on_at(cids, ts)
-        elif use_avail:
-            oks = avail_rng.rand(n) < avail[cids]
-        else:
-            oks = np.ones(n, bool)
-        if snaps is None:
-            snaps = [server.flat_params] * n   # (S, d) lane stack
-        if versions is None:
-            versions = np.full(n, server.version, np.int64)
-        timeline.extend_arrays(t_done, np.arange(seq, seq + n), cids,
-                               versions, oks, snaps)
-        seq += n
-        result.launched += n
-
-    dispatch_many(np.zeros(concurrency))
+    # Same Dispatcher as run_async: batched=True snapshots the (S, d) lane
+    # stack, and the RNG stream layout is identical, so a 1-lane sweep
+    # replays the exact single-run event timeline.
+    dispatcher = Dispatcher(sim, streams, scheduler, timeline, server,
+                            result, batched=True, data_sizes=data_sizes)
+    dispatcher.dispatch_many(np.zeros(concurrency))
 
     t = _drain_sweep(server, cfg, params_lanes, client_datasets, sim,
-                     dispatch_many, timeline, evaluate, result, data_sizes,
-                     align, psa_cfg, calib_batch, digest_fn, data_seeds)
+                     dispatcher.dispatch_many, timeline, evaluate, result,
+                     data_sizes, align, psa_cfg, calib_batch, digest_fn,
+                     data_seeds)
 
     final = evaluate(server.flat_params)
     result.final_accuracy = [float(a) for a in final]
@@ -1263,21 +1209,16 @@ def run_fedavg(cfg: ModelConfig, init_params, client_datasets: List[ClientDatase
     slowest, aggregate weighted by client data size. With the cohort engine
     the whole round trains as one device call and the global model stays a
     flat (d,) vector between rounds."""
-    tseed = _timeline_seed(sim)
-    rng = np.random.RandomState(tseed)
-    latency, lat_means = per_client_latency(
-        sim.latency_kind, sim.latency_lo, sim.latency_hi, sim.num_clients,
-        tseed)
-    avail = per_client_availability(sim.availability_kind, sim.dropout_rate,
-                                    sim.num_clients, tseed,
-                                    latency_means=lat_means)
-    avail_rng = np.random.RandomState(_subseed(tseed, STREAM_AVAIL_DRAWS))
-    use_trace = sim.availability_kind == "trace" and sim.dropout_rate > 0.0
-    trace = (make_availability_trace(sim.num_clients, sim.horizon,
-                                     sim.dropout_rate, tseed)
-             if use_trace else None)
-    use_avail = (sim.availability_kind not in ("always", "trace")
-                 and sim.dropout_rate > 0.0)
+    streams = make_streams(sim)
+    latency = streams.latency
+    avail, avail_rng = streams.avail, streams.avail_rng
+    trace = streams.trace
+    use_trace, use_avail = streams.use_trace, streams.use_avail
+    # Round sampling draws from its own _subseed stream: the bare dispatch
+    # RandomState(tseed) belongs to the async schedulers, and sharing it
+    # here let the sync path perturb async reproducibility at equal seeds.
+    choice_rng = np.random.RandomState(
+        _subseed(streams.tseed, STREAM_SYNC_CHOICE))
     evaluate = _make_eval(cfg, test_ds, sim)
     engine = _resolve_engine(sim, cfg)
     batched = engine == "cohort"
@@ -1301,7 +1242,7 @@ def run_fedavg(cfg: ModelConfig, init_params, client_datasets: List[ClientDatase
             result.times.append(next_eval)
             result.accuracies.append(acc)
             next_eval += sim.eval_every
-        chosen = rng.choice(sim.num_clients, size=m, replace=False)
+        chosen = choice_rng.choice(sim.num_clients, size=m, replace=False)
         result.launched += len(chosen)
         round_time = float(latency.sample_for(chosen).max())
         if use_trace or use_avail:

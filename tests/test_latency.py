@@ -144,9 +144,13 @@ def test_rng_streams_decorrelated_at_equal_base_seed():
     one base seed, the latency-means, jitter and availability streams must
     all start from distinct MT19937 states (no stream may replay another)."""
     for seed in (0, 1, 24306 - 0x5EED, 12345):
-        subs = [_subseed(seed, s) for s in range(5)]
+        subs = [_subseed(seed, s) for s in range(6)]
         assert len(set(subs)) == len(subs), (seed, subs)
-        draws = [np.random.RandomState(ss).rand(8) for ss in subs]
+        # the bare dispatch stream (RandomState(seed), owned by the
+        # schedulers) must also be distinct from every sub-stream — in
+        # particular from the fedavg round-sampling stream (STREAM 5),
+        # which used to BE the dispatch stream
+        draws = [np.random.RandomState(ss).rand(8) for ss in [seed] + subs]
         for i in range(len(draws)):
             for j in range(i + 1, len(draws)):
                 assert not np.array_equal(draws[i], draws[j]), (seed, i, j)

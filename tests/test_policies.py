@@ -187,6 +187,85 @@ def test_asyncfeded_distance_policy():
     assert bool(jnp.all(tu.tree_all_finite(srv.params)))
 
 
+def test_asyncfeded_distance_metric_family():
+    """cosine/sketch variants of the distance family: every metric gives a
+    fresh client the full alpha; drifted clients are damped; the sketch
+    metric's JL estimate tracks the exact l2 rule."""
+    params = _params()
+    delta, client, meta = _arrival_stream(params, 1)[0]
+    far_client = tu.tree_add(client, tu.tree_scale(params, 5.0))
+
+    weights = {}
+    for metric in ("l2", "cosine", "sketch"):
+        srv = servers.make_server("asyncfeded", params, alpha=0.5,
+                                  metric=metric)
+        srv.receive(delta, client, meta)          # fresh: full alpha
+        assert abs(srv.log[-1]["weight"] - 0.5) < 1e-5, metric
+        srv.receive(delta, far_client, meta)      # drifted: damped
+        weights[metric] = srv.log[-1]["weight"]
+        assert weights[metric] < 0.5, metric
+        assert bool(jnp.all(tu.tree_all_finite(srv.params)))
+    # sketch approximates the exact l2 ratio (k=16 JL estimate: loose but
+    # same order of magnitude)
+    assert weights["sketch"] == pytest.approx(weights["l2"], rel=1.0)
+
+    with pytest.raises(ValueError, match="unknown distance metric"):
+        policies.asyncfeded_policy(tu.FlatSpec(params), metric="manhattan")
+
+
+def test_asyncfeded_l2_unchanged_by_family_refactor():
+    """The default metric must reproduce the original AsyncFedED arithmetic
+    exactly (golden streams pin it): compare against the closed form."""
+    params = _params()
+    spec = tu.FlatSpec(params)
+    delta, client, meta = _arrival_stream(params, 1, seed=9)[0]
+    far_client = tu.tree_add(client, tu.tree_scale(params, 3.0))
+    srv = servers.make_server("asyncfeded", params, alpha=0.6)
+    g0 = srv.flat_params
+    srv.receive(delta, far_client, meta)
+    dw = spec.flatten(delta)
+    dist = float(jnp.linalg.norm(spec.flatten(far_client) - g0))
+    norm = float(jnp.linalg.norm(dw))
+    s = 0.6 * min(1.0, norm / (dist + 1e-8))
+    assert srv.log[-1]["weight"] == pytest.approx(s, rel=1e-6)
+
+
+def test_dist_mode_is_a_lane_hyperparameter():
+    """l2 and cosine share one compiled step with the metric as a traced
+    lane value: a 2-lane server with per-lane dist_mode must reproduce the
+    two single-metric servers."""
+    params = _params()
+    spec = tu.FlatSpec(params)
+    delta, client, meta = _arrival_stream(params, 1)[0]
+    far_client = tu.tree_add(client, tu.tree_scale(params, 5.0))
+    lane_srv = servers.make_lane_server(
+        "asyncfeded", [params, params],
+        [dict(dist_mode="l2"), dict(dist_mode="cosine")], num_clients=5)
+    dws = jnp.broadcast_to(spec.flatten(delta), (2, 1, spec.size))
+    wis = jnp.broadcast_to(spec.flatten(far_client), (2, 1, spec.size))
+    lane_srv.receive_many(dws, wis, [meta["client_id"]],
+                          [meta["data_size"]], [0])
+    lanes = np.asarray(lane_srv.flat_params)
+
+    for k, metric in enumerate(("l2", "cosine")):
+        srv = servers.make_server("asyncfeded", params, metric=metric)
+        srv.receive(delta, far_client, meta)
+        np.testing.assert_allclose(lanes[k], np.asarray(srv.flat_params),
+                                   rtol=1e-5, atol=1e-6)
+    # the two metrics genuinely disagree on a drifted client
+    assert float(np.max(np.abs(lanes[0] - lanes[1]))) > 1e-6
+
+
+def test_make_hyper_dist_mode_coercion():
+    from repro.core import psa as psa_lib
+    assert float(policies.make_hyper(dist_mode="l2").dist_mode) == \
+        psa_lib.DIST_MODE_L2
+    assert float(policies.make_hyper(dist_mode="cosine").dist_mode) == \
+        psa_lib.DIST_MODE_COSINE
+    with pytest.raises(ValueError, match="sketch"):
+        policies.make_hyper(dist_mode="sketch")
+
+
 def test_asyncfeded_runs_in_simulator():
     from repro.configs import get_config
     from repro.data import (ClientDataset, dirichlet_partition,

@@ -52,12 +52,14 @@ def world():
     return cfg, clients, test, params
 
 
-def _sim(seed, latency_kind, availability_kind, dropout_rate, engine):
+def _sim(seed, latency_kind, availability_kind, dropout_rate, engine,
+         scheduler="uniform"):
     return SimConfig(num_clients=NUM_CLIENTS, horizon=3_500.0,
                      eval_every=1_750.0, seed=seed,
                      latency_kind=latency_kind,
                      availability_kind=availability_kind,
                      dropout_rate=dropout_rate, engine=engine,
+                     scheduler=scheduler,
                      record_trajectory=True)
 
 
@@ -104,14 +106,14 @@ def _run_cohort_instrumented(world, sim):
 
 
 def _check_invariants(world, seed, latency_kind, availability_kind,
-                      dropout_rate):
+                      dropout_rate, scheduler="uniform"):
     cfg, clients, test, params = world
     seq = run_algorithm("fedbuff", cfg, params, clients, test,
                         _sim(seed, latency_kind, availability_kind,
-                             dropout_rate, "sequential"))
+                             dropout_rate, "sequential", scheduler))
     coh, trained, vdisp, by_version = _run_cohort_instrumented(
         world, _sim(seed, latency_kind, availability_kind, dropout_rate,
-                    "cohort"))
+                    "cohort", scheduler))
 
     # -- re-dispatch safety: each arrival trained from the exact snapshot
     #    of its version-at-dispatch
@@ -139,15 +141,21 @@ def _check_invariants(world, seed, latency_kind, availability_kind,
     assert seq.dispatches > 0
 
 
+# every dispatch scheduler must uphold the wave invariants — in particular
+# the period scheduler's deferred launches and the staleness scheduler's
+# sequential weighted draws may not break re-dispatch safety or the
+# sequential-vs-cohort oracle parity
+@pytest.mark.parametrize("scheduler", ["uniform", "period", "staleness"])
 @pytest.mark.parametrize("seed,latency_kind,availability_kind,dropout_rate", [
     (0, "uniform", "always", 0.0),
     (1, "longtail", "hetero", 0.3),
     (2, "uniform", "slow-fragile", 0.25),
 ])
 def test_wave_invariants_fixed_draws(world, seed, latency_kind,
-                                     availability_kind, dropout_rate):
+                                     availability_kind, dropout_rate,
+                                     scheduler):
     _check_invariants(world, seed, latency_kind, availability_kind,
-                      dropout_rate)
+                      dropout_rate, scheduler)
 
 
 if HAVE_HYPOTHESIS:
@@ -155,10 +163,12 @@ if HAVE_HYPOTHESIS:
            latency_kind=st.sampled_from(["uniform", "longtail"]),
            availability_kind=st.sampled_from(
                ["always", "uniform", "hetero", "slow-fragile"]),
-           dropout_rate=st.floats(0.05, 0.45))
+           dropout_rate=st.floats(0.05, 0.45),
+           scheduler=st.sampled_from(["uniform", "period", "staleness"]))
     @settings(max_examples=5, deadline=None,
               suppress_health_check=[HealthCheck.function_scoped_fixture])
     def test_wave_invariants_fuzzed(world, seed, latency_kind,
-                                    availability_kind, dropout_rate):
+                                    availability_kind, dropout_rate,
+                                    scheduler):
         _check_invariants(world, seed, latency_kind, availability_kind,
-                          dropout_rate)
+                          dropout_rate, scheduler)

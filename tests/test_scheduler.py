@@ -1,0 +1,241 @@
+"""Unit tests for the pluggable dispatch-scheduler layer.
+
+The load-bearing guarantee is backward compatibility: the default
+``UniformRefillScheduler`` must consume the MT19937 dispatch stream
+bit-for-bit as the pre-refactor inline ``rng.randint`` path did (every
+golden digest stream under ``tests/golden/`` is pinned to it). The rest
+covers the scheduler contract — ``launch_times >= ts`` wave safety, the
+staleness scheduler's weighted selection and its batch == scalar stream
+discipline — plus the AULC-NaN and fedavg stream-separation regressions.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.federated.latency import (STREAM_SYNC_CHOICE, _subseed,
+                                     per_client_availability,
+                                     per_client_latency)
+from repro.federated.scheduler import (SCHEDULERS, PeriodTriggeredScheduler,
+                                       StalenessAwareScheduler,
+                                       UniformRefillScheduler,
+                                       make_scheduler, make_streams)
+from repro.federated.simulator import SimConfig, SimResult
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def _bound(sched, num_clients=12, seed=7, **kw):
+    sched.bind(num_clients=num_clients, rng=np.random.RandomState(seed), **kw)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# UniformRefill: bit-identical to the pre-refactor inline dispatch path
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_bit_identical_to_inline_path():
+    """Replay the historical inline rule — ``rng.randint(C, size=n)`` on the
+    bare ``RandomState(tseed)`` — against the scheduler over a mixed batch/
+    scalar call pattern: every draw must match exactly."""
+    C, tseed = 50, 123
+    inline = np.random.RandomState(tseed)
+    sched = _bound(UniformRefillScheduler(), num_clients=C, seed=tseed)
+    for n in (10, 1, 3, 1, 1, 7):   # initial fill, waves, single re-dispatch
+        ts = np.linspace(0.0, 100.0, n)
+        expect = inline.randint(C, size=n)
+        got = sched.select(sched.launch_times(ts),
+                           np.zeros(n, np.int64))
+        np.testing.assert_array_equal(got, expect)
+
+
+def test_uniform_launch_times_identity():
+    ts = np.array([0.0, 13.7, 999.2])
+    sched = _bound(UniformRefillScheduler())
+    np.testing.assert_array_equal(sched.launch_times(ts), ts)
+
+
+# ---------------------------------------------------------------------------
+# Period-triggered: deferred launches on wall-clock ticks
+# ---------------------------------------------------------------------------
+
+
+def test_period_launch_times_on_ticks():
+    sched = _bound(PeriodTriggeredScheduler(period=20.0))
+    ts = np.array([0.0, 0.1, 19.9, 20.0, 20.1, 55.0])
+    got = sched.launch_times(ts)
+    np.testing.assert_allclose(got, [0.0, 20.0, 20.0, 20.0, 40.0, 60.0])
+    # wave-safety contract: a launch may be deferred, never advanced
+    assert np.all(got >= ts)
+
+
+def test_period_selection_stream_matches_uniform():
+    """The period scheduler defers WHEN, not WHO: selection consumes the
+    dispatch stream exactly as the uniform rule."""
+    u = _bound(UniformRefillScheduler(), seed=3)
+    p = _bound(PeriodTriggeredScheduler(period=5.0), seed=3)
+    ts = np.array([1.0, 2.0, 3.0])
+    np.testing.assert_array_equal(
+        u.select(ts, np.zeros(3, np.int64)),
+        p.select(p.launch_times(ts), np.zeros(3, np.int64)))
+
+
+def test_period_rejects_nonpositive():
+    with pytest.raises(ValueError, match="period"):
+        PeriodTriggeredScheduler(period=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Staleness-aware: utility/lag-weighted selection
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_prefers_most_lagged_client():
+    sched = _bound(StalenessAwareScheduler(staleness_weight=8.0),
+                   num_clients=4)
+    # client 2 was never dispatched at a high server version: enormous lag
+    sched.last_version[:] = [100.0, 100.0, 0.0, 100.0]
+    picks = set()
+    for _ in range(8):
+        c = int(sched.select(np.array([0.0]), np.array([100]))[0])
+        picks.add(c)
+        sched.last_version[:] = [100.0, 100.0, 0.0, 100.0]  # re-arm
+    assert picks == {2}, picks
+
+
+def test_staleness_select_updates_lag_table():
+    sched = _bound(StalenessAwareScheduler(), num_clients=4)
+    c = int(sched.select(np.array([0.0]), np.array([17]))[0])
+    assert sched.last_version[c] == 17.0
+
+
+def test_staleness_batch_equals_scalar_stream():
+    """One batched select must consume the RNG exactly as scalar selects —
+    the cohort drain and the sequential oracle stay stream-identical."""
+    a = _bound(StalenessAwareScheduler(), num_clients=9, seed=11)
+    b = _bound(StalenessAwareScheduler(), num_clients=9, seed=11)
+    ts = np.arange(5.0)
+    versions = np.array([3, 3, 4, 5, 5])
+    batched = a.select(ts, versions)
+    scalar = [int(b.select(ts[i:i + 1], versions[i:i + 1])[0])
+              for i in range(5)]
+    np.testing.assert_array_equal(batched, scalar)
+
+
+def test_staleness_uses_size_and_availability_state():
+    """size/avail weights shape the base preference: with no lag signal the
+    larger, more-available client dominates."""
+    sizes = np.array([1.0, 400.0])
+    avail = np.array([0.05, 0.95])
+    sched = StalenessAwareScheduler(size_weight=3.0, avail_weight=3.0)
+    sched.bind(num_clients=2, rng=np.random.RandomState(0),
+               data_sizes=sizes, avail_probs=avail)
+    draws = sched.select(np.zeros(50), np.zeros(50, np.int64))
+    assert np.mean(draws == 1) > 0.9
+
+
+# ---------------------------------------------------------------------------
+# Factory + SimConfig plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_make_scheduler_names_and_params():
+    assert set(SCHEDULERS) == {"uniform", "period", "staleness"}
+    sim = SimConfig(num_clients=10, scheduler="period",
+                    scheduler_params={"period": 7.0})
+    sched = make_scheduler(sim)
+    assert isinstance(sched, PeriodTriggeredScheduler)
+    assert sched.period == 7.0
+    # default period scales with the latency floor
+    sched = make_scheduler(SimConfig(num_clients=10, scheduler="period",
+                                     latency_lo=10.0))
+    assert sched.period == 20.0
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_scheduler(SimConfig(num_clients=10, scheduler="nope"))
+
+
+def test_stateless_flags():
+    assert UniformRefillScheduler.stateless
+    assert PeriodTriggeredScheduler.stateless
+    assert not StalenessAwareScheduler.stateless
+
+
+def test_make_streams_matches_historical_layout():
+    """``make_streams`` must reproduce the exact RNG objects the entry
+    points used to build inline: dispatch = bare RandomState(tseed),
+    latency/availability on their own sub-streams."""
+    sim = SimConfig(num_clients=20, seed=5, latency_kind="uniform",
+                    availability_kind="hetero", dropout_rate=0.3)
+    st = make_streams(sim)
+    assert st.tseed == 5
+    np.testing.assert_array_equal(st.rng.rand(4),
+                                  np.random.RandomState(5).rand(4))
+    lat, means = per_client_latency("uniform", sim.latency_lo,
+                                    sim.latency_hi, 20, 5)
+    np.testing.assert_array_equal(st.lat_means, means)
+    np.testing.assert_array_equal(
+        st.avail, per_client_availability("hetero", 0.3, 20, 5,
+                                          latency_means=means))
+    assert st.use_avail and not st.use_trace and st.trace is None
+    # timeline_seed splits the event timeline off the model seed
+    st2 = make_streams(SimConfig(num_clients=20, seed=5, timeline_seed=99))
+    assert st2.tseed == 99
+
+
+# ---------------------------------------------------------------------------
+# Regressions: AULC NaN + fedavg round-sampling stream separation
+# ---------------------------------------------------------------------------
+
+
+def test_aulc_nan_with_fewer_than_two_points():
+    """A run recording < 2 eval points has no area to integrate: AULC must
+    be NaN, never a silent 0.0 that poisons comparison tables."""
+    assert np.isnan(SimResult().aulc)
+    assert np.isnan(SimResult(times=[100.0], accuracies=[0.5]).aulc)
+    assert np.isnan(SimResult(times=[5.0, 5.0], accuracies=[0.5, 0.6]).aulc)
+    ok = SimResult(times=[0.0, 10.0], accuracies=[0.0, 1.0])
+    assert ok.aulc == pytest.approx(0.5)
+
+
+def test_bench_writers_surface_nan_aulc():
+    from benchmarks import common as bench_common
+    assert bench_common.aulc_json(float("nan")) is None
+    assert bench_common.aulc_json(0.37) == pytest.approx(0.37)
+
+
+def test_checkpoint_rejects_stateful_scheduler(tmp_path):
+    """The staleness scheduler's lag table lives outside the checkpoint
+    format; run_async must refuse up front rather than resume wrongly."""
+    import jax
+    from repro.configs import get_config
+    from repro.data import (ClientDataset, iid_partition,
+                            make_classification, train_test_split)
+    from repro.federated import run_algorithm
+    from repro.models import model as M
+
+    cfg = get_config("paper-synthetic-mlp")
+    full = make_classification(200, 10, 32, seed=0)
+    train, test = train_test_split(full, 0.2)
+    clients = [ClientDataset(train.subset(ix))
+               for ix in iid_partition(train, 4, 0)]
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sim = SimConfig(num_clients=4, horizon=100.0, scheduler="staleness",
+                    checkpoint_dir=str(tmp_path), engine="sequential")
+    with pytest.raises(ValueError, match="cannot be checkpointed"):
+        run_algorithm("fedasync", cfg, params, clients, test, sim)
+
+
+def test_fedavg_round_sampling_has_own_stream():
+    """The synchronous fedavg round choice must come from STREAM_SYNC_CHOICE,
+    not the bare dispatch stream the async schedulers own: at equal base
+    seeds the two streams must differ (the old behavior replayed the async
+    cid draws as round cohorts)."""
+    for seed in (0, 1, 42, 12345):
+        sub = _subseed(seed, STREAM_SYNC_CHOICE)
+        assert sub != seed
+        dispatch = np.random.RandomState(seed).choice(50, size=10,
+                                                      replace=False)
+        sync = np.random.RandomState(sub).choice(50, size=10, replace=False)
+        assert not np.array_equal(dispatch, sync), seed
