@@ -3,7 +3,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-multidevice golden golden-regen golden-check \
-	bench-smoke bench bench-sim bench-sweep bench-pop bench-sched
+	bench-smoke bench bench-sim bench-sweep bench-pop bench-sched \
+	bench-kernel roofline
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,6 +42,21 @@ golden-check:
 # including BENCH_server_step.json (legacy ingest vs fused jitted step).
 bench-smoke:
 	$(PY) -m benchmarks.kernel_micro
+
+# Grouped member-GEMM vs the vmapped member path at production d_model from
+# the configs/ zoo, plus the fed-lm sketch compile-time cells (unrolled
+# baseline vs vectorized; gate: >= 3x); writes
+# artifacts/bench/BENCH_grouped_matmul.json.
+bench-kernel:
+	$(PY) -c "from benchmarks.kernel_micro import bench_grouped_matmul as b; b()"
+
+# Roofline table: generate fresh dry-run records for two cheap configs-zoo
+# cells (the dry-run MUST be its own process: it forces 512 host devices via
+# XLA_FLAGS at import), then render. Writes artifacts/roofline_pod.json.
+roofline:
+	$(PY) -m repro.launch.dryrun --arch internvl2-1b --shape train_4k --mesh pod
+	$(PY) -m repro.launch.dryrun --arch xlstm-350m --shape train_4k --mesh pod
+	$(PY) -m benchmarks.roofline
 
 # Simulator dispatch throughput: legacy per-client loop vs the cohort
 # engine; writes artifacts/bench/BENCH_sim_throughput.json, then the

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core import sketch as sk
 from repro.core.sensitivity import sensitivity_from_parts
-from repro.kernels import ops, ref
+from repro.kernels import grouped_matmul_pallas, ops, ref
 from benchmarks import common
 
 
@@ -96,6 +96,89 @@ def bench_server_step(n_arrivals: int = 60):
     return rows
 
 
+def bench_grouped_matmul():
+    """Grouped member-GEMM (one wave of heterogeneous members' dense layers
+    as a single Pallas grouped GEMM) vs the vmapped dot_general path the
+    cohort engines use by default, at production d_model from the configs/
+    zoo (the member contraction dim is the model width; N is one 128-lane
+    output tile so the CPU cells stay tractable). The win is only gated
+    where the backend actually vectorizes the kernel (TPU); on CPU the
+    kernel runs in interpret mode and the cell is recorded ungated.
+
+    Plus the fed-lm compile-time cells: legacy per-row unrolled sketch
+    (``sketch_tree(..., unroll=True)``, the committed baseline) vs the
+    vectorized default, trace+compile wall time on the fed-lm-smoke
+    parameter tree (acceptance: >= 3x drop).
+
+    Writes artifacts/bench/BENCH_grouped_matmul.json.
+    """
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+
+    backend = jax.default_backend()
+    gated = backend == "tpu"
+    rows = {"backend": backend, "gated": gated,
+            "note": ("grouped timings are Pallas interpret mode (not "
+                     "TPU-representative) — parity is the checked claim"
+                     if not gated else "compiled Pallas timings")}
+
+    vmap_dot = jax.jit(jax.vmap(
+        lambda a, b: jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())))))
+    grouped = jax.jit(lambda a, b: grouped_matmul_pallas(a, b))
+
+    # (arch, G members in the wave, M rows per member); K = d_model.
+    cells = [("phi4-mini-3.8b", 8, 8), ("minitron-8b", 8, 8),
+             ("llama3-405b", 4, 8)]
+    key = jax.random.PRNGKey(0)
+    for arch, g, m in cells:
+        k = get_config(arch).d_model
+        n = 128
+        a = jax.random.normal(key, (g, m, k), jnp.float32)
+        b = jax.random.normal(jax.random.fold_in(key, 1), (g, k, n), jnp.float32)
+        t_vmap, o_vmap = _time(vmap_dot, a, b)
+        t_grp, o_grp = _time(grouped, a, b, reps=1)
+        o_ref = ref.grouped_matmul_ref(a, b)
+        scale = float(jnp.max(jnp.abs(o_ref))) + 1e-9
+        rel = float(jnp.max(jnp.abs(o_grp - o_ref))) / scale
+        assert rel < 1e-5, f"grouped kernel diverged from ref at {arch}: {rel}"
+        rows[f"member_gemm_{arch}"] = {
+            "G": g, "M": m, "K": k, "N": n,
+            "vmap_us": t_vmap * 1e6, "grouped_us": t_grp * 1e6,
+            "speedup_x": t_vmap / t_grp, "rel_err_vs_ref": rel,
+        }
+        print(f"kernel,grouped_matmul,{arch},G={g},M={m},K={k},N={n},"
+              f"vmap_us={t_vmap*1e6:.0f},grouped_us={t_grp*1e6:.0f},"
+              f"relerr={rel:.1e}")
+
+    # Compile-time cells: program size of the unrolled sketch grows as
+    # k x n_leaves distinct hash/reduce chains; the vectorized form is one
+    # fused chain independent of k.
+    cfg = get_config("fed-lm-smoke")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+
+    def compile_s(unroll):
+        f = jax.jit(lambda p: sk.sketch_tree(p, 0, 16, unroll=unroll))
+        t0 = time.time()
+        f.lower(params).compile()
+        return time.time() - t0
+
+    t_base = compile_s(True)
+    t_vec = compile_s(False)
+    rows["fed_lm_sketch_compile"] = {
+        "model": cfg.name,
+        "n_leaves": len(jax.tree_util.tree_leaves(params)),
+        "unrolled_baseline_s": t_base, "vectorized_s": t_vec,
+        "speedup_x": t_base / t_vec,
+    }
+    print(f"compile,fed_lm_sketch,{cfg.name},unrolled_s={t_base:.1f},"
+          f"vectorized_s={t_vec:.2f},speedup={t_base/t_vec:.1f}x")
+    assert t_base / t_vec >= 3.0, (
+        f"sketch compile speedup regressed below 3x: {t_base/t_vec:.2f}")
+
+    common.save("BENCH_grouped_matmul", rows)
+    return rows
+
+
 def main(argv=None):
     key = jax.random.PRNGKey(0)
     rows = {}
@@ -143,6 +226,7 @@ def main(argv=None):
                           "pallas_interpret_us": t_kern * 1e6}
     print(f"kernel,buffer_agg,L={L},d={d},jnp_us={t_ref*1e6:.0f},"
           f"pallas_interp_us={t_kern*1e6:.0f}")
+    rows["grouped_matmul"] = bench_grouped_matmul()
     rows["server_step"] = bench_server_step()
     common.save("kernel_micro", rows)
     return rows

@@ -76,19 +76,38 @@ def _leaf_linear_index(shape) -> jnp.ndarray:
     return idx
 
 
-def sketch_leaf(leaf: jnp.ndarray, seed_u32, k: int = DEFAULT_K) -> jnp.ndarray:
-    """(k,) partial sketch of one leaf: row-at-a-time contraction, each row an
-    elementwise hash+multiply+reduce (one tiny all-reduce under GSPMD)."""
+def sketch_leaf(leaf: jnp.ndarray, seed_u32, k: int = DEFAULT_K,
+                unroll: bool = False) -> jnp.ndarray:
+    """(k,) partial sketch of one leaf.
+
+    Default: all k rows at once on a trailing sign axis — one fused
+    hash+multiply+reduce whose XLA program size is independent of k (the
+    unrolled form was the ~2-min fedpsa token-sketch compile: k rows x
+    n_leaves distinct hash/reduce chains). Bit-identical to the unrolled
+    path: the uint32 hash math is unchanged, ``lin[..., None] * k + r`` is
+    the same index each row r hashed, and each row still reduces over
+    exactly the leaf axes (the k axis stays unreduced).
+
+    ``unroll=True`` keeps the legacy row-at-a-time form — the committed
+    compile-time baseline (benchmarks/kernel_micro.py measures both).
+    """
     x = leaf.astype(jnp.float32)
     lin = _leaf_linear_index(leaf.shape)
-    rows = []
-    for r in range(k):
-        sign = rademacher_row(seed_u32, lin, r, k)
-        rows.append(jnp.sum(x * sign))
-    return jnp.stack(rows) / np.sqrt(k)
+    if unroll:
+        rows = []
+        for r in range(k):
+            sign = rademacher_row(seed_u32, lin, r, k)
+            rows.append(jnp.sum(x * sign))
+        return jnp.stack(rows) / np.sqrt(k)
+    r = jnp.arange(k, dtype=jnp.uint32)
+    h = pcg_hash(seed_u32 ^ pcg_hash(lin[..., None] * jnp.uint32(k) + r))
+    sign = jnp.where((h >> jnp.uint32(31)) == 0, 1.0, -1.0).astype(jnp.float32)
+    return jnp.sum(x[..., None] * sign,
+                   axis=tuple(range(x.ndim))) / np.sqrt(k)
 
 
-def sketch_tree(tree, seed: int = 0, k: int = DEFAULT_K) -> jnp.ndarray:
+def sketch_tree(tree, seed: int = 0, k: int = DEFAULT_K,
+                unroll: bool = False) -> jnp.ndarray:
     """Full-model sensitivity sketch: sum of per-leaf partial sketches.
 
     Equivalent to R @ concat(leaves) for the blockwise-defined R.
@@ -96,7 +115,7 @@ def sketch_tree(tree, seed: int = 0, k: int = DEFAULT_K) -> jnp.ndarray:
     leaves = jax.tree_util.tree_leaves(tree)
     total = jnp.zeros((k,), jnp.float32)
     for i, leaf in enumerate(leaves):
-        total = total + sketch_leaf(leaf, leaf_seed(seed, i), k)
+        total = total + sketch_leaf(leaf, leaf_seed(seed, i), k, unroll)
     return total
 
 

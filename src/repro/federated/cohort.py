@@ -42,6 +42,7 @@ from repro.common import tree as tu
 from repro.common.sharding import SINGLE_DEVICE_RULES
 from repro.data.loader import StackedClients, epoch_batch_indices
 from repro.federated.client import _head
+from repro.models import member_math
 from repro.models import registry
 from repro.models.config import ModelConfig
 
@@ -83,7 +84,8 @@ class CohortEngine:
                  spec: tu.FlatSpec, template_params, *,
                  local_epochs: int = 5, batch_size: int = 64,
                  prox: float = 0.0, align: float = 0.0,
-                 mesh=None, rules: Optional[sharding.LogicalRules] = None):
+                 mesh=None, rules: Optional[sharding.LogicalRules] = None,
+                 member_kernel: str = "vmap"):
         # any registered family compiles; get_family raises (naming the
         # registered set) for families the registry does not know
         fam = registry.get_family(cfg)
@@ -94,6 +96,10 @@ class CohortEngine:
         self.batch_size = int(batch_size)
         self.prox = float(prox)
         self.align = float(align)
+        if member_kernel not in member_math.MODES:
+            raise ValueError(f"member_kernel must be one of "
+                             f"{member_math.MODES}, got {member_kernel!r}")
+        self.member_kernel = member_kernel
         self.sizes = np.asarray(stacked.sizes, np.int64)
         self.x = jnp.asarray(stacked.x)
         self.y = jnp.asarray(stacked.y)
@@ -123,17 +129,22 @@ class CohortEngine:
         # pins everything _build closes over: the model (which fixes the
         # flat layout), the static loss variant, and the registry entry —
         # so register_family(..., override=True) invalidates the program.
-        key = (cfg, spec, self.prox, self.align, fam)
+        key = (cfg, spec, self.prox, self.align, fam, member_kernel)
         if key not in _RUN_CACHE:
             _RUN_CACHE[key] = self._build(cfg, spec, self.prox, self.align,
-                                          fam)
+                                          fam, member_kernel)
         self._run, self._run_lanes = _RUN_CACHE[key]
 
     # -- compiled core ------------------------------------------------------
 
     @staticmethod
-    def _build(cfg, spec, prox, align, fam):
+    def _build(cfg, spec, prox, align, fam, member_kernel="vmap"):
         def member(x_all, y_all, p0_flat, cid, idx, valid, counts, lr_steps):
+          # member-math routing is a trace-time switch: "grouped" makes the
+          # vmap over members collapse every dense layer into one Pallas
+          # grouped-GEMM launch (models.member_math); "vmap" keeps the exact
+          # per-member dot_general HLO the golden digests pin.
+          with member_math.routing(member_kernel):
             xs = x_all[cid]          # (n_max, ...) this member's data
             ys = y_all[cid]
             # The scan carries the params *pytree*: unflatten/flatten happen
@@ -342,7 +353,7 @@ class StreamingCohortEngine(CohortEngine):
     def __init__(self, cfg: ModelConfig, store, spec: tu.FlatSpec,
                  template_params, *, local_epochs: int = 5,
                  batch_size: int = 64, prox: float = 0.0,
-                 align: float = 0.0):
+                 align: float = 0.0, member_kernel: str = "vmap"):
         fam = registry.get_family(cfg)
         self._data_kind = fam.data_kind
         self.cfg = cfg
@@ -351,6 +362,10 @@ class StreamingCohortEngine(CohortEngine):
         self.batch_size = int(batch_size)
         self.prox = float(prox)
         self.align = float(align)
+        if member_kernel not in member_math.MODES:
+            raise ValueError(f"member_kernel must be one of "
+                             f"{member_math.MODES}, got {member_kernel!r}")
+        self.member_kernel = member_kernel
         self.store = store
         self.sizes = np.asarray(store.sizes, np.int64)
         self.mesh = None
@@ -360,15 +375,16 @@ class StreamingCohortEngine(CohortEngine):
                                  * (self.sizes // bs_c)).astype(int)
         self.num_steps = int(self.steps_per_client.max())
         self.bs_pad = int(bs_c.max())
-        key = (cfg, spec, self.prox, self.align, fam, "rows")
+        key = (cfg, spec, self.prox, self.align, fam, member_kernel, "rows")
         if key not in _RUN_CACHE:
             _RUN_CACHE[key] = self._build_rows(cfg, spec, self.prox,
-                                               self.align, fam)
+                                               self.align, fam, member_kernel)
         self._run_rows, self._run_rows_lanes = _RUN_CACHE[key]
 
     @staticmethod
-    def _build_rows(cfg, spec, prox, align, fam):
+    def _build_rows(cfg, spec, prox, align, fam, member_kernel="vmap"):
         def member(xs, ys, p0_flat, idx, valid, counts, lr_steps):
+          with member_math.routing(member_kernel):
             # identical member program to CohortEngine._build, minus the
             # in-jit x_all[cid] gather: xs/ys are this member's rows
             anchor = spec.unflatten(p0_flat)

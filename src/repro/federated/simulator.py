@@ -133,6 +133,12 @@ class SimConfig:
     eval_batch_size: int = 512
     engine: str = "cohort"             # "cohort" (batched) | "sequential"
     max_cohort: int = 256              # cap on one wave's device batch
+    # Member-math routing inside the cohort engines (models.member_math):
+    # "vmap" keeps the per-member dot_general HLO the golden digests pin;
+    # "grouped" collapses each wave's dense layers into single Pallas
+    # grouped-GEMM launches over the stacked member axis (compiled on TPU,
+    # interpret fallback elsewhere) — 1e-5-parity-pinned against "vmap".
+    member_kernel: str = "vmap"        # "vmap" | "grouped"
     # Streaming client slabs (population scale): ``shard_size > 0`` switches
     # the cohort engine from the monolithic (C, n_max, ...) device slab to
     # fixed-size client shards uploaded lazily per wave behind a bounded LRU
@@ -573,12 +579,13 @@ def _make_cohort_engine(cfg, client_datasets, spec, template_params,
         return StreamingCohortEngine(
             cfg, store, spec, template_params,
             local_epochs=sim.local_epochs, batch_size=sim.batch_size,
-            prox=prox, align=align)
+            prox=prox, align=align, member_kernel=sim.member_kernel)
     stacked = StackedClients.from_datasets(client_datasets)
     return CohortEngine(cfg, stacked, spec, template_params,
                         local_epochs=sim.local_epochs,
                         batch_size=sim.batch_size, prox=prox, align=align,
-                        mesh=sim.mesh, rules=sim.rules)
+                        mesh=sim.mesh, rules=sim.rules,
+                        member_kernel=sim.member_kernel)
 
 
 def _gather_snapshots(snaps) -> jnp.ndarray:

@@ -4,6 +4,8 @@
 * buffer_agg       — Eq. 20 buffered weighted-sum apply
 * flash_attention  — online-softmax attention forward (VMEM-resident state;
                      the §Perf answer to HBM-resident probability blocks)
+* grouped_matmul   — grouped member-GEMM over the stacked cohort axis (one
+                     wave of heterogeneous members' dense layers = one kernel)
 
 Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
 (ref.py); on CPU they run in interpret mode.
@@ -12,3 +14,4 @@ from repro.kernels import ops, ref
 from repro.kernels.sens_sketch import sens_sketch_pallas
 from repro.kernels.buffer_agg import buffer_agg_pallas
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_matmul import grouped_matmul_pallas

@@ -19,11 +19,14 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.buffer_agg import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -70,11 +73,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True) -> jnp.ndarray:
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd) with H % Hkv == 0.
 
     Returns (B, Sq, H, hd) in q.dtype; softmax math in f32.
     """
+    interpret = resolve_interpret(interpret)
     B, Sq, H, hd = q.shape
     _, Sk, Hkv, _ = k.shape
     assert H % Hkv == 0

@@ -1,6 +1,7 @@
 """Pure-jnp oracles for the Pallas kernels (bit-compatible hashing)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -23,3 +24,33 @@ def buffer_agg_ref(weights, global_vec, updates) -> jnp.ndarray:
     """global + sum_l w_l * updates_l in f32."""
     return global_vec.astype(jnp.float32) + jnp.einsum(
         "l,ld->d", weights.astype(jnp.float32), updates.astype(jnp.float32))
+
+
+def grouped_matmul_ref(lhs, rhs, valid=None) -> jnp.ndarray:
+    """lhs (G, M, K) @ rhs (G, K, N) -> (G, M, N), f32 accumulation, with
+    the per-group validity mask zeroing padded member slots exactly."""
+    out = jnp.einsum("gmk,gkn->gmn", lhs.astype(jnp.float32),
+                     rhs.astype(jnp.float32))
+    if valid is not None:
+        out = out * valid.astype(jnp.float32)[:, None, None]
+    return out.astype(jnp.promote_types(lhs.dtype, rhs.dtype))
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """Materialized-softmax GQA attention: q (B, Sq, H, hd), k/v
+    (B, Sk, Hkv, hd) with H % Hkv == 0; returns (B, Sq, H, hd) in q.dtype,
+    softmax math in f32 — the oracle for kernels.flash_attention."""
+    B, Sq, H, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert H % Hkv == 0
+    group = H // Hkv
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) / np.sqrt(hd)
+    if causal:
+        # same absolute-position rule as the kernel: key j attends to query
+        # i iff j <= i (positions indexed from the start of each sequence)
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf).astype(q.dtype)

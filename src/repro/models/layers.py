@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.common.sharding import LogicalRules, with_logical_constraint
 from repro.models.config import ModelConfig
+from repro.models.member_math import member_dot
 
 
 def dtype_of(cfg: ModelConfig):
@@ -255,9 +256,9 @@ def attention_forward(
     B, S, D = x.shape
     if positions is None:
         positions = jnp.arange(S)[None, :]
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    q = member_dot(x, params["wq"].astype(x.dtype))
+    k = member_dot(x, params["wk"].astype(x.dtype))
+    v = member_dot(x, params["wv"].astype(x.dtype))
     q = with_logical_constraint(q, rules, ("batch", "seq", "heads", "head_dim"))
     k = with_logical_constraint(k, rules, ("batch", "seq", "kv_heads", "head_dim"))
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -271,7 +272,7 @@ def attention_forward(
         remat_chunks=(cfg.remat == "full"),
     )
     out = with_logical_constraint(out, rules, ("batch", "seq", "heads", "head_dim"))
-    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    y = member_dot(out, params["wo"].astype(x.dtype), ncon=2)
     return with_logical_constraint(y, rules, ("batch", "seq", "embed_act"))
 
 
@@ -308,9 +309,9 @@ def attention_decode(params, cache, x, pos, cfg: ModelConfig, rules: LogicalRule
     """
     B = x.shape[0]
     C = cache["k"].shape[1]
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    q = member_dot(x, params["wq"].astype(x.dtype))
+    k = member_dot(x, params["wk"].astype(x.dtype))
+    v = member_dot(x, params["wv"].astype(x.dtype))
     posb = jnp.full((B, 1), pos)
     q = apply_rope(q, posb, cfg.rope_theta)
     k = apply_rope(k, posb, cfg.rope_theta)
@@ -319,7 +320,7 @@ def attention_decode(params, cache, x, pos, cfg: ModelConfig, rules: LogicalRule
     v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
     valid = jnp.minimum(pos + 1, C)
     out = decode_attention(q, k_cache, v_cache, valid)
-    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    y = member_dot(out, params["wo"].astype(x.dtype), ncon=2)
     return {"k": k_cache, "v": v_cache}, y
 
 
@@ -332,8 +333,8 @@ def attention_fill_cache(params, x, cfg: ModelConfig, rules: LogicalRules,
     """
     B, S, D = x.shape
     positions = jnp.arange(S)[None, :]
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    k = member_dot(x, params["wk"].astype(x.dtype))
+    v = member_dot(x, params["wv"].astype(x.dtype))
     k = apply_rope(k, positions, cfg.rope_theta)
     y = attention_forward(params, x, cfg, rules, positions)
     C = attention_cache_size(cfg, max(max_len or S, S))
@@ -377,9 +378,9 @@ FFN_AXES = {
 
 
 def ffn_forward(params, x, cfg: ModelConfig, rules: LogicalRules):
-    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype))
+    h = member_dot(x, params["w_in"].astype(x.dtype))
     if cfg.ffn_act == "swiglu":
-        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        g = member_dot(x, params["w_gate"].astype(x.dtype))
         h = jax.nn.silu(g) * h
     elif cfg.ffn_act == "gelu":
         h = jax.nn.gelu(h)
@@ -388,7 +389,7 @@ def ffn_forward(params, x, cfg: ModelConfig, rules: LogicalRules):
     else:
         h = jax.nn.relu(h)
     h = with_logical_constraint(h, rules, ("batch", "seq", "mlp"))
-    y = jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype))
+    y = member_dot(h, params["w_out"].astype(x.dtype))
     return with_logical_constraint(y, rules, ("batch", "seq", "embed_act"))
 
 
@@ -437,6 +438,6 @@ def unembed(params, x, cfg: ModelConfig, rules: LogicalRules):
         w = params["tok"].astype(x.dtype).T
     else:
         w = params["unembed"].astype(x.dtype)
-    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = member_dot(x, w)
     logits = mask_vocab_pad(logits, cfg)
     return with_logical_constraint(logits, rules, ("batch", "seq", "vocab"))

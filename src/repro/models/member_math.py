@@ -1,0 +1,169 @@
+"""Member-math routing: one seam for every dense layer a cohort member runs.
+
+The cohort engines execute B members as ``vmap(member)``; XLA CPU lowers the
+batched per-member GEMMs to B independent dots it never vectorizes (the
+ROADMAP "accelerator-true hot path" item). ``member_dot`` is the seam that
+fixes this: model code calls it for every dense contraction, and the active
+routing mode decides what the batched program looks like.
+
+* ``"vmap"`` (default): a plain ``lax.dot_general`` — the identical HLO the
+  previous einsum call sites produced, so the golden digest streams are
+  untouched bit for bit.
+* ``"grouped"``: a custom ``member_dot2d`` primitive whose batching rule
+  collapses the member (and lane) axes into the group axis of the Pallas
+  grouped-GEMM kernel (``kernels/grouped_matmul.py``) — one wave of
+  heterogeneous members' layers executes as one grouped kernel launch.
+
+Autodiff happens *inside* the member vmap (each member runs ``jax.grad`` of
+its local loss), so JVP/transpose rules live on the 2-D primitive and the
+binds they emit are batched afterwards; the grouped primitive still carries
+its own bilinear rules for robustness. The mode is a trace-time switch
+(``routing(...)`` context entered inside the traced member body); the cohort
+run caches key on it, so each mode traces exactly once.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.core import ShapedArray
+from jax.extend.core import Primitive
+from jax.interpreters import ad, batching, mlir
+
+from repro.kernels.grouped_matmul import grouped_matmul_pallas
+
+_MODE = "vmap"
+MODES = ("vmap", "grouped")
+
+
+@contextlib.contextmanager
+def routing(mode: str):
+    """Trace-time member-math mode; enter inside the function being traced."""
+    if mode not in MODES:
+        raise ValueError(f"member_kernel must be one of {MODES}, got {mode!r}")
+    global _MODE
+    prev, _MODE = _MODE, mode
+    try:
+        yield
+    finally:
+        _MODE = prev
+
+
+def current_mode() -> str:
+    return _MODE
+
+
+# --- 2-D primitive: (M, K) @ (K, N) as seen by one (unbatched) member -----
+
+member_dot_p = Primitive("member_dot2d")
+
+
+def _dot2d(x, w):
+    return jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())))
+
+
+def _dot2d_abstract(x, w):
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0], \
+        (x.shape, w.shape)
+    return ShapedArray((x.shape[0], w.shape[1]),
+                       jnp.promote_types(x.dtype, w.dtype))
+
+
+member_dot_p.def_impl(_dot2d)
+member_dot_p.def_abstract_eval(_dot2d_abstract)
+mlir.register_lowering(member_dot_p,
+                       mlir.lower_fun(_dot2d, multiple_results=False))
+ad.defbilinear(member_dot_p,
+               lambda ct, x, w: member_dot_p.bind(ct, w.T),
+               lambda ct, x, w: member_dot_p.bind(x.T, ct))
+
+
+def _dot2d_batch(args, dims):
+    x, w = args
+    xd, wd = dims
+    if wd is None:
+        # shared weights across the batch: one big (G*M, K) @ (K, N) dot
+        x = jnp.moveaxis(x, xd, 0)
+        g, m, k = x.shape
+        out = member_dot_p.bind(x.reshape(g * m, k), w)
+        return out.reshape(g, m, w.shape[1]), 0
+    if xd is None:
+        w = jnp.moveaxis(w, wd, 0)
+        x = jnp.broadcast_to(x, (w.shape[0],) + x.shape)
+    else:
+        x = jnp.moveaxis(x, xd, 0)
+        w = jnp.moveaxis(w, wd, 0)
+    return grouped_dot_p.bind(x, w), 0
+
+
+batching.primitive_batchers[member_dot_p] = _dot2d_batch
+
+
+# --- grouped primitive: (G, M, K) @ (G, K, N), lowered to the Pallas kernel
+
+grouped_dot_p = Primitive("member_dot_grouped")
+
+
+def _grouped_impl(x, w):
+    return grouped_matmul_pallas(x, w)
+
+
+def _grouped_abstract(x, w):
+    assert x.ndim == 3 and w.ndim == 3 and x.shape[0] == w.shape[0] \
+        and x.shape[2] == w.shape[1], (x.shape, w.shape)
+    return ShapedArray((x.shape[0], x.shape[1], w.shape[2]),
+                       jnp.promote_types(x.dtype, w.dtype))
+
+
+grouped_dot_p.def_impl(_grouped_impl)
+grouped_dot_p.def_abstract_eval(_grouped_abstract)
+mlir.register_lowering(grouped_dot_p,
+                       mlir.lower_fun(_grouped_impl, multiple_results=False))
+ad.defbilinear(grouped_dot_p,
+               lambda ct, x, w: grouped_dot_p.bind(ct, jnp.swapaxes(w, 1, 2)),
+               lambda ct, x, w: grouped_dot_p.bind(jnp.swapaxes(x, 1, 2), ct))
+
+
+def _grouped_batch(args, dims):
+    # a further vmap (the sweep lane axis) folds into the group axis
+    x, w = args
+    xd, wd = dims
+    if xd is None:
+        w = jnp.moveaxis(w, wd, 0)
+        x = jnp.broadcast_to(x, (w.shape[0],) + x.shape)
+    elif wd is None:
+        x = jnp.moveaxis(x, xd, 0)
+        w = jnp.broadcast_to(w, (x.shape[0],) + w.shape)
+    else:
+        x = jnp.moveaxis(x, xd, 0)
+        w = jnp.moveaxis(w, wd, 0)
+    lanes, g = x.shape[:2]
+    out = grouped_dot_p.bind(x.reshape((lanes * g,) + x.shape[2:]),
+                             w.reshape((lanes * g,) + w.shape[2:]))
+    return out.reshape((lanes, g) + out.shape[1:]), 0
+
+
+batching.primitive_batchers[grouped_dot_p] = _grouped_batch
+
+
+# --- public seam ----------------------------------------------------------
+
+def member_dot(x: jnp.ndarray, w: jnp.ndarray, ncon: int = 1) -> jnp.ndarray:
+    """Contract the last ``ncon`` axes of ``x`` with the first ``ncon`` of
+    ``w`` (output = x-free axes ++ w-free axes, exactly the einsum the call
+    sites used to spell). Routes by the active member-math mode."""
+    if x.dtype != w.dtype:
+        common = jnp.promote_types(x.dtype, w.dtype)
+        x, w = x.astype(common), w.astype(common)
+    if _MODE == "vmap":
+        lhs_c = tuple(range(x.ndim - ncon, x.ndim))
+        rhs_c = tuple(range(ncon))
+        return jax.lax.dot_general(x, w, ((lhs_c, rhs_c), ((), ())))
+    batch_shape = x.shape[:-ncon]
+    m = math.prod(batch_shape)
+    k = math.prod(x.shape[-ncon:])
+    n = math.prod(w.shape[ncon:])
+    out = member_dot_p.bind(x.reshape(m, k), w.reshape(k, n))
+    return out.reshape(batch_shape + w.shape[ncon:])

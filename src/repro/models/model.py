@@ -30,6 +30,7 @@ import numpy as np
 from repro.common.sharding import LogicalRules, with_logical_constraint
 from repro.models import layers, moe, ssm
 from repro.models.config import ModelConfig
+from repro.models.member_math import member_dot
 
 
 # ---------------------------------------------------------------------------
@@ -301,12 +302,12 @@ def embed_inputs(params, batch: dict, cfg: ModelConfig, rules: LogicalRules):
     """Returns (x, label_mask_extra) where x: (B, S, D)."""
     if cfg.frontend == "audio":
         x = batch["features"].astype(layers.dtype_of(cfg))
-        x = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+        x = member_dot(x, params["in_proj"].astype(x.dtype))
         return with_logical_constraint(x, rules, ("batch", "seq", "embed_act"))
     tok = layers.embed_tokens(params["embed"], batch["tokens"], cfg, rules)
     if cfg.frontend == "vision" and "patches" in batch:
         p = batch["patches"].astype(tok.dtype)
-        p = jnp.einsum("bpd,de->bpe", p, params["proj"].astype(tok.dtype))
+        p = member_dot(p, params["proj"].astype(tok.dtype))
         tok = jnp.concatenate([p, tok], axis=1)
     return with_logical_constraint(tok, rules, ("batch", "seq", "embed_act"))
 
@@ -343,7 +344,7 @@ def chunked_cross_entropy(hidden, unembed_w, labels, cfg: ModelConfig,
     def body(carry, idx):
         tot, cnt = carry
         h = hid[:, idx].reshape(B * chunk, D)
-        logits = jnp.einsum("nd,dv->nv", h, unembed_w.astype(h.dtype))
+        logits = member_dot(h, unembed_w.astype(h.dtype))
         logits = layers.mask_vocab_pad(logits, cfg)
         logits = with_logical_constraint(logits, rules, ("tokens", "vocab"))
         t, c = _xent_from_logits(logits, lab[:, idx].reshape(-1))
@@ -390,7 +391,7 @@ def forward_logits(params, batch: dict, cfg: ModelConfig, rules: LogicalRules):
     x = embed_inputs(params, batch, cfg, rules)
     hidden, _ = backbone_forward(params, x, cfg, rules)
     w = _unembed_weight(params, cfg)
-    logits = jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype))
+    logits = member_dot(hidden, w.astype(hidden.dtype))
     logits = layers.mask_vocab_pad(logits, cfg)
     return with_logical_constraint(logits, rules, ("batch", "seq", "vocab"))
 
@@ -473,7 +474,7 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, rules: LogicalRule
     x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
     x = _norm_apply(cfg)(params["final_norm"], x)
     w = _unembed_weight(params, cfg)
-    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = member_dot(x, w.astype(x.dtype))
     logits = layers.mask_vocab_pad(logits, cfg)
     return new_cache, with_logical_constraint(logits, rules, ("batch", "seq", "vocab"))
 
@@ -519,7 +520,7 @@ def prefill(params, batch: dict, cfg: ModelConfig, rules: LogicalRules,
     x = _norm_apply(cfg)(params["final_norm"], x)
     w = _unembed_weight(params, cfg)
     last = x[:, -1]
-    logits = jnp.einsum("bd,dv->bv", last, w.astype(x.dtype))
+    logits = member_dot(last, w.astype(x.dtype))
     logits = layers.mask_vocab_pad(logits, cfg)
     return cache, with_logical_constraint(logits, rules, ("batch", "vocab"))
 
@@ -529,7 +530,7 @@ def encode(params, batch: dict, cfg: ModelConfig, rules: LogicalRules):
     x = embed_inputs(params, batch, cfg, rules)
     hidden, _ = backbone_forward(params, x, cfg, rules)
     w = _unembed_weight(params, cfg)
-    logits = jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype))
+    logits = member_dot(hidden, w.astype(hidden.dtype))
     logits = layers.mask_vocab_pad(logits, cfg)
     return with_logical_constraint(logits, rules, ("batch", "seq", "vocab"))
 
@@ -576,7 +577,7 @@ def cnn_forward(params, x, cfg: ModelConfig):
     n_fc = len(cfg.mlp_hidden) + 1
     for i in range(n_fc):
         p = params[f"fc{i}"]
-        x = x @ p["w"] + p["b"]
+        x = member_dot(x, p["w"]) + p["b"]
         if i < n_fc - 1:
             x = jax.nn.relu(x)
     return x
@@ -604,7 +605,7 @@ def mlp_forward(params, x, cfg: ModelConfig):
     n = len(cfg.mlp_hidden) + 1
     for i in range(n):
         p = params[f"fc{i}"]
-        x = x @ p["w"] + p["b"]
+        x = member_dot(x, p["w"]) + p["b"]
         if i < n - 1:
             x = jax.nn.relu(x)
     return x

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.common.sharding import LogicalRules, with_logical_constraint
 from repro.models.config import ModelConfig
 from repro.models import layers
+from repro.models.member_math import member_dot
 
 
 def init_moe(key, cfg: ModelConfig) -> dict:
@@ -79,8 +80,7 @@ def moe_forward(params, x, cfg: ModelConfig, rules: LogicalRules):
     xt = x.reshape(G, Tg, D)
     xt = with_logical_constraint(xt, rules, (g_ax, "tokens" if G == 1 else None, "embed_act"))
 
-    logits = jnp.einsum("gtd,de->gte", xt,
-                        params["router"].astype(x.dtype)).astype(jnp.float32)
+    logits = member_dot(xt, params["router"].astype(x.dtype)).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)  # (G, Tg, E)
     top_p, top_e = jax.lax.top_k(probs, K)   # (G, Tg, K)
     if cfg.name.startswith("qwen2-moe"):
@@ -114,7 +114,10 @@ def moe_forward(params, x, cfg: ModelConfig, rules: LogicalRules):
     buf = with_logical_constraint(
         buf, rules, (g_ax, "expert", "expert_capacity", "embed_act"))
 
-    # Expert computation (SwiGLU), batched over groups and experts.
+    # Expert computation (SwiGLU), batched over groups and experts. These
+    # stay on XLA einsum (not member_dot): the expert axis e is a diagonal
+    # batch dim shared by activations and weights, which the grouped member
+    # kernel's (group, M, K) x (group, K, N) form cannot express.
     h_in = jnp.einsum("gecd,edf->gecf", buf, params["w_in"].astype(x.dtype))
     h_gate = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(x.dtype))
     h = jax.nn.silu(h_gate) * h_in
@@ -146,7 +149,7 @@ def moe_forward_dense(params, x, cfg: ModelConfig, rules: LogicalRules):
     B, S, D = x.shape
     E, K = cfg.num_experts, cfg.top_k
     xt = x.reshape(B * S, D)
-    logits = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype)).astype(jnp.float32)
+    logits = member_dot(xt, params["router"].astype(x.dtype)).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     top_p, top_e = jax.lax.top_k(probs, K)
     if cfg.name.startswith("qwen2-moe"):

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.common.sharding import LogicalRules, with_logical_constraint
 from repro.models.config import ModelConfig
 from repro.models import layers
+from repro.models.member_math import member_dot
 
 
 # ---------------------------------------------------------------------------
@@ -101,7 +102,7 @@ def mamba_forward(params, x, cfg: ModelConfig, rules: LogicalRules):
 def _mamba_scan(params, x, cfg: ModelConfig, rules: LogicalRules):
     B, S, D = x.shape
     E, N, K = cfg.ssm_inner, cfg.ssm_state_dim, cfg.conv_kernel
-    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xz = member_dot(x, params["in_proj"].astype(x.dtype))
     xz = with_logical_constraint(xz, rules, ("batch", "seq", "ssm_inner"))
     xi, z = jnp.split(xz, 2, axis=-1)
     # depthwise causal conv over time
@@ -120,7 +121,7 @@ def _mamba_scan(params, x, cfg: ModelConfig, rules: LogicalRules):
     h, ys = jax.lax.scan(step, h0, jnp.swapaxes(xc, 0, 1))  # ys: (S, B, E)
     y = jnp.swapaxes(ys, 0, 1).astype(x.dtype)
     y = y * jax.nn.silu(z)
-    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    out = member_dot(y, params["out_proj"].astype(x.dtype))
     out = with_logical_constraint(out, rules, ("batch", "seq", "embed_act"))
     # final conv state = last K-1 raw (pre-conv) inner activations
     conv_state = xpad[:, -(K - 1):]
@@ -225,10 +226,10 @@ def _mlstm_qkvif(params, xs, cfg):
     """xs: (B, S, inner) -> per-step tensors, all f32."""
     inner, H, hd = _mlstm_dims(cfg)
     scale = hd ** -0.5
-    q = jnp.einsum("bsi,ihd->bshd", xs, params["wq"].astype(xs.dtype)).astype(jnp.float32)
-    k = jnp.einsum("bsi,ihd->bshd", xs, params["wk"].astype(xs.dtype)).astype(jnp.float32) * scale
-    v = jnp.einsum("bsi,ihd->bshd", xs, params["wv"].astype(xs.dtype)).astype(jnp.float32)
-    gates = jnp.einsum("bsi,ih->bsh", xs, params["w_if"].astype(xs.dtype)).astype(jnp.float32)
+    q = member_dot(xs, params["wq"].astype(xs.dtype)).astype(jnp.float32)
+    k = member_dot(xs, params["wk"].astype(xs.dtype)).astype(jnp.float32) * scale
+    v = member_dot(xs, params["wv"].astype(xs.dtype)).astype(jnp.float32)
+    gates = member_dot(xs, params["w_if"].astype(xs.dtype)).astype(jnp.float32)
     gates = gates + params["b_if"].astype(jnp.float32)
     i_pre, f_pre = jnp.split(gates, 2, axis=-1)
     return q, k, v, i_pre, f_pre
@@ -243,7 +244,7 @@ def _mlstm_groupnorm(params, h, eps=1e-5):
 def _mlstm_scan(params, x, cfg: ModelConfig, rules: LogicalRules):
     B, S, D = x.shape
     inner, H, hd = _mlstm_dims(cfg)
-    up = jnp.einsum("bsd,di->bsi", x, params["up_proj"].astype(x.dtype))
+    up = member_dot(x, params["up_proj"].astype(x.dtype))
     up = with_logical_constraint(up, rules, ("batch", "seq", "ssm_inner"))
     xs, z = jnp.split(up, 2, axis=-1)
     q, k, v, i_pre, f_pre = _mlstm_qkvif(params, xs, cfg)
@@ -261,7 +262,7 @@ def _mlstm_scan(params, x, cfg: ModelConfig, rules: LogicalRules):
     h = jnp.swapaxes(hs, 0, 1)
     h = _mlstm_groupnorm(params, h).reshape(B, S, inner).astype(x.dtype)
     y = h * jax.nn.silu(z)
-    out = jnp.einsum("bsi,id->bsd", y, params["down_proj"].astype(x.dtype))
+    out = member_dot(y, params["down_proj"].astype(x.dtype))
     out = with_logical_constraint(out, rules, ("batch", "seq", "embed_act"))
     return {"C": state[0], "n": state[1], "m": state[2]}, out
 
@@ -360,7 +361,7 @@ def _slstm_apply(params, x, cfg: ModelConfig, rules: LogicalRules, state=None):
     B, S, D = x.shape
     H = cfg.num_heads
     hd = D // H
-    xp = jnp.einsum("bsd,dghe->bsghe", x, params["w_x"].astype(x.dtype))  # (B,S,4,H,hd)
+    xp = member_dot(x, params["w_x"].astype(x.dtype))  # (B,S,4,H,hd)
     if state is None:
         zeros = jnp.zeros((B, H, hd), jnp.float32)
         state = (zeros, zeros, jnp.full((B, H, hd), -1e30, jnp.float32), zeros)
@@ -374,10 +375,10 @@ def _slstm_apply(params, x, cfg: ModelConfig, rules: LogicalRules, state=None):
     h = h * jax.lax.rsqrt(var + 1e-5) * params["gn_scale"].astype(jnp.float32)
     y = h.reshape(B, S, D).astype(x.dtype)
     # gated FFN
-    ff = jnp.einsum("bsd,df->bsf", y, params["ffn_in"].astype(x.dtype))
+    ff = member_dot(y, params["ffn_in"].astype(x.dtype))
     a, g = jnp.split(ff, 2, axis=-1)
     ff = a * jax.nn.sigmoid(g)  # GeGLU-style gate
-    out = jnp.einsum("bsf,fd->bsd", ff, params["ffn_out"].astype(x.dtype))
+    out = member_dot(ff, params["ffn_out"].astype(x.dtype))
     out = with_logical_constraint(out, rules, ("batch", "seq", "embed_act"))
     return state, out
 
@@ -409,15 +410,15 @@ SLSTM_STATE_AXES = {
 def slstm_decode(params, state, x, cfg: ModelConfig):
     st = (state["c"], state["n"], state["m"], state["h"])
     B, S, D = x.shape
-    xp = jnp.einsum("bsd,dghe->bsghe", x, params["w_x"].astype(x.dtype))
+    xp = member_dot(x, params["w_x"].astype(x.dtype))
     st, h = _slstm_step(params, st, xp[:, 0])
     H = cfg.num_heads
     hd = D // H
     var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
     h = h * jax.lax.rsqrt(var + 1e-5) * params["gn_scale"].astype(jnp.float32)
     y = h.reshape(B, 1, D).astype(x.dtype)
-    ff = jnp.einsum("bsd,df->bsf", y, params["ffn_in"].astype(x.dtype))
+    ff = member_dot(y, params["ffn_in"].astype(x.dtype))
     a, g = jnp.split(ff, 2, axis=-1)
     ff = a * jax.nn.sigmoid(g)
-    out = jnp.einsum("bsf,fd->bsd", ff, params["ffn_out"].astype(x.dtype))
+    out = member_dot(ff, params["ffn_out"].astype(x.dtype))
     return {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}, out

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
 from repro.models.layers import chunked_attention
 from tests.test_attention import naive_attention
 
@@ -41,6 +42,24 @@ def test_flash_dtypes(dtype):
     tol = 3e-2 if dtype == "bfloat16" else 3e-4
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,hd,causal", [
+    (2, 64, 4, 2, 16, True),     # GQA
+    (1, 100, 2, 2, 8, False),    # MHA, bidirectional, ragged seq
+    (1, 48, 4, 1, 32, True),     # MQA
+])
+def test_flash_vs_ref_oracle(B, S, H, Hkv, hd, causal):
+    """Kernel vs its kernels/ref.py oracle (the kernel-contract pairing:
+    every Pallas kernel ships a pure-jnp reference in ref.py)."""
+    key = jax.random.PRNGKey(S + H)
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, hd))
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
 
 
 def test_flash_block_shape_invariance():
