@@ -74,11 +74,16 @@ bench-sim:
 bench-sweep:
 	$(PY) -m benchmarks.sweep_throughput
 
-# Population-scale dispatch cost: C=5k vs C=100k lazy populations through
-# the streaming cohort engine at a fixed in-flight count; writes
-# artifacts/bench/BENCH_population.json with peak host RSS per cell
-# (gates: per-dispatch <= 1.3x across cells, RSS set by shard geometry not
-# C). Narrow with POP_BENCH_PRESETS=pop-smoke for the CI cell.
+# Population-scale dispatch cost: C=5k / 100k / 1M lazy populations
+# through the streaming cohort engine at a fixed in-flight count (pop-1m
+# runs with async shard prefetch on); writes
+# artifacts/bench/BENCH_population.json with peak host RSS + full slab
+# serving stats per cell and the staleness-select fast-vs-exact column
+# (gates: per-dispatch <= 1.3x across adjacent cells, pop-1m wall within
+# budget, fast staleness sampler >= 10x the exact loop at C=100k, RSS set
+# by shard geometry not C). Narrow with
+# POP_BENCH_PRESETS=pop-smoke,pop-1m-smoke POP_BENCH_TARGET=200 for the
+# CI cells.
 bench-pop:
 	$(PY) -m benchmarks.population_throughput
 

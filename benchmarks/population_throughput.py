@@ -1,27 +1,38 @@
-"""Population-scale dispatch cost: streaming slabs at C=5k vs C=100k.
+"""Population-scale dispatch cost: streaming slabs at C=5k / 100k / 1M.
 
-The claim under test (ISSUE 7 / ROADMAP "million-client simulator"): with
-the vectorized timeline + chunked/streaming client slabs, per-dispatch wall
-cost is set by the WAVE (how many clients train at once), not by the
-population size, and resident memory is set by the shard-cache geometry,
-not by C. Each cell dispatches from a lazy ``SyntheticPopulation`` through
-the streaming cohort engine with the SAME absolute in-flight count (1024
-clients training at once), so C=5k and C=100k run comparable device waves
-and their per-dispatch costs are directly comparable.
+The claim under test (ISSUE 7 + ISSUE 10 / ROADMAP "million-client
+simulator"): with the vectorized timeline + chunked/streaming client slabs
++ async shard prefetch, per-dispatch wall cost is set by the WAVE (how many
+clients train at once), not by the population size, and resident memory is
+set by the shard-cache geometry, not by C. Each cell dispatches from a lazy
+``SyntheticPopulation`` through the streaming cohort engine with the SAME
+absolute in-flight count (1024 clients training at once), so C=5k, C=100k
+and C=1M run comparable device waves and their per-dispatch costs are
+directly comparable. The ``pop-1m`` cell runs with ``prefetch=True`` — the
+next wave's host materialization + H2D upload overlaps device compute.
 
 Per cell we run one full-length warmup (jit caches, shard cache, eval) and
-one timed run while a sampler thread tracks peak host RSS. Writes
-artifacts/bench/BENCH_population.json.
+one timed run while a sampler thread tracks peak host RSS; every cell row
+records the slab store's full serving stats (hit/row-fetch rates, prefetch
+hits, evictions). A separate column benchmarks staleness-aware selection
+at C=100k: the PR-10 sublinear rejection sampler vs the historical exact
+O(C) recompute loop, per draw. Writes artifacts/bench/BENCH_population.json.
 
 Acceptance gates (exit 1 with a WARNING when violated):
   * per-dispatch wall cost at C=100k <= 1.3x the C=5k cell;
+  * per-dispatch wall cost at C=1M <= 1.3x the C=100k cell;
+  * the C=1M timed run completes within POP_BENCH_1M_BUDGET_S wall seconds
+    (default 60);
+  * the fast staleness sampler's per-draw cost at C=100k improves on the
+    exact loop by >= 10x;
   * peak RSS of the largest cell <= smallest cell's peak +
     POP_BENCH_RSS_MARGIN_MB (default 600 MB — far below the ~1.6 GB a
     monolithic C=100k slab would add, generous to allocator noise).
 
 Override the cells with POP_BENCH_PRESETS (comma list of
-``repro.configs.population`` preset names; CI runs ``pop-smoke``, a tiny C
-forced through a fragmented multi-shard cache, gating only RSS).
+``repro.configs.population`` preset names; CI runs ``pop-smoke`` plus
+``pop-1m-smoke`` — tiny C forced through fragmented multi-shard caches,
+the latter with prefetch on — gating only RSS and the sampler speedup).
 """
 from __future__ import annotations
 
@@ -43,10 +54,22 @@ from benchmarks import common
 LATENCY_LO, LATENCY_HI = 100.0, 500.0
 LOCAL_EPOCHS = 2
 BATCH_SIZE = 32
-TARGET_DISPATCHES = 200   # receives per timed run, roughly, at every C
-DEFAULT_PRESETS = "pop-5k,pop-100k"
+# Receives per timed run, roughly, at every C. The default is sized so a
+# run spans MANY waves: per-dispatch cost then measures steady state (the
+# O(C) per-run setup — e.g. drawing 1M per-client latency means —
+# amortizes away) and the prefetch pipeline actually has next waves to
+# stage. POP_BENCH_TARGET=200 gives a quick single-wave smoke.
+TARGET_DISPATCHES = int(os.environ.get("POP_BENCH_TARGET", "1000"))
+DEFAULT_PRESETS = "pop-5k,pop-100k,pop-1m"
 GATE_RATIO = 1.3
 GATE_CELLS = ("pop-5k", "pop-100k")
+GATE_RATIO_1M = 1.3
+GATE_CELLS_1M = ("pop-100k", "pop-1m")
+BUDGET_1M_S = 60.0             # wall budget for the pop-1m timed run
+STALENESS_GATE = 10.0          # fast sampler >= 10x the exact loop
+STALENESS_C = 100_000
+STALENESS_DRAWS = 256          # fast-path draws timed (after warmup)
+STALENESS_EXACT_DRAWS = 8      # exact O(C) draws timed (each is ~ms-scale)
 
 
 class RssSampler:
@@ -137,6 +160,7 @@ def bench_cell(name: str, seed: int = 0) -> dict:
         "num_clients": preset.num_clients,
         "n_inflight": preset.n_inflight,
         "horizon": horizon,
+        "prefetch": preset.prefetch,
         "shard_size": preset.shard_size,
         "shard_cache": preset.shard_cache,
         "resident_bound_mb": preset.resident_mb,
@@ -157,6 +181,54 @@ def bench_cell(name: str, seed: int = 0) -> dict:
           f"peak_rss_mb={cell['peak_rss_mb']:.0f},"
           f"slab={store.stats}", flush=True)
     return cell
+
+
+def bench_staleness_select(C: int = STALENESS_C, seed: int = 1) -> dict:
+    """Per-draw cost of staleness-aware selection at population scale: the
+    sublinear rejection sampler (the default) vs the historical exact O(C)
+    full-recompute loop (``exact=True``), on identical bound state over a
+    realistic advancing-version trajectory."""
+    import numpy as np
+
+    from repro.federated.scheduler import StalenessAwareScheduler
+
+    def bound(**kw):
+        s = StalenessAwareScheduler(**kw)
+        s.bind(num_clients=C, rng=np.random.RandomState(seed))
+        return s
+
+    fast = bound()
+    v = 0.0
+    for i in range(16):                       # warm the envelope/cumsum
+        v += 1.0
+        fast.select(np.array([float(i)]), np.array([v]))
+    t0 = time.perf_counter()
+    for i in range(STALENESS_DRAWS):
+        v += 1.0
+        fast.select(np.array([float(i)]), np.array([v]))
+    per_fast = (time.perf_counter() - t0) / STALENESS_DRAWS
+
+    exact = bound(exact=True)
+    t0 = time.perf_counter()
+    for i in range(STALENESS_EXACT_DRAWS):
+        exact.select(np.array([float(i)]), np.array([float(i + 1)]))
+    per_exact = (time.perf_counter() - t0) / STALENESS_EXACT_DRAWS
+
+    col = {
+        "num_clients": C,
+        "timed_draws_fast": STALENESS_DRAWS,
+        "timed_draws_exact": STALENESS_EXACT_DRAWS,
+        "per_draw_us_fast": 1e6 * per_fast,
+        "per_draw_us_exact": 1e6 * per_exact,
+        "speedup": per_exact / per_fast,
+        "sample_stats": dict(fast.sample_stats),
+    }
+    print(f"population,staleness_select,C={C},"
+          f"per_draw_us_fast={col['per_draw_us_fast']:.1f},"
+          f"per_draw_us_exact={col['per_draw_us_exact']:.1f},"
+          f"speedup={col['speedup']:.1f} (gate >= {STALENESS_GATE})",
+          flush=True)
+    return col
 
 
 def main(argv=None) -> int:
@@ -187,6 +259,33 @@ def main(argv=None) -> int:
         if ratio > GATE_RATIO:
             failures.append(f"per-dispatch cost at C=100k is {ratio:.2f}x "
                             f"the C=5k cell (> {GATE_RATIO}x)")
+    if all(n in by_name for n in GATE_CELLS_1M):
+        ratio = (by_name[GATE_CELLS_1M[1]]["per_dispatch_ms"]
+                 / by_name[GATE_CELLS_1M[0]]["per_dispatch_ms"])
+        payload["per_dispatch_ratio_1m_vs_100k"] = ratio
+        print(f"population,per_dispatch_ratio_1m={ratio:.3f} (gate <= "
+              f"{GATE_RATIO_1M})", flush=True)
+        if ratio > GATE_RATIO_1M:
+            failures.append(f"per-dispatch cost at C=1M is {ratio:.2f}x "
+                            f"the C=100k cell (> {GATE_RATIO_1M}x)")
+    if "pop-1m" in by_name:
+        budget = float(os.environ.get("POP_BENCH_1M_BUDGET_S",
+                                      str(BUDGET_1M_S)))
+        wall = by_name["pop-1m"]["wall_s"]
+        payload["budget_1m_s"] = budget
+        print(f"population,pop_1m_wall_s={wall:.1f} (budget <= "
+              f"{budget:.0f}s)", flush=True)
+        if wall > budget:
+            failures.append(f"the C=1M timed run took {wall:.1f}s "
+                            f"(> {budget:.0f}s budget)")
+    sched_col = bench_staleness_select(
+        int(os.environ.get("STALENESS_BENCH_CLIENTS", str(STALENESS_C))))
+    payload["staleness_select"] = sched_col
+    if sched_col["speedup"] < STALENESS_GATE:
+        failures.append(
+            f"staleness-aware fast sampler is only "
+            f"{sched_col['speedup']:.1f}x the exact loop at "
+            f"C={sched_col['num_clients']} (gate >= {STALENESS_GATE}x)")
     if len(cells) >= 2:
         margin = float(os.environ.get("POP_BENCH_RSS_MARGIN_MB", "600"))
         small = min(cells, key=lambda c: c["num_clients"])

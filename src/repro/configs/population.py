@@ -28,6 +28,9 @@ class PopulationPreset:
     # absolute number of concurrently-training clients (NOT a fraction:
     # the bench holds this fixed across C so waves stay comparable)
     n_inflight: int = 1024
+    # overlap the next wave's shard/row materialization + H2D upload with
+    # device compute (SimConfig.prefetch; results bit-identical either way)
+    prefetch: bool = False
     # population shape (SyntheticPopulation)
     num_classes: int = 10
     dim: int = 32
@@ -50,7 +53,8 @@ class PopulationPreset:
                     concurrency=self.n_inflight / self.num_clients,
                     shard_size=self.shard_size,
                     shard_cache=self.shard_cache,
-                    shard_promote=self.shard_promote)
+                    shard_promote=self.shard_promote,
+                    prefetch=self.prefetch)
 
     @property
     def resident_mb(self) -> float:
@@ -64,13 +68,27 @@ POPULATION_PRESETS = {
     # the bench baseline / headline pair (ISSUE 7 acceptance gate)
     "pop-5k": PopulationPreset(5_000),
     "pop-100k": PopulationPreset(100_000),
-    # the ROADMAP north star; same resident bound as pop-100k
-    "pop-1m": PopulationPreset(1_000_000, shard_size=1024, shard_cache=4),
+    # the ROADMAP north star; same resident bound as pop-100k. At C=1M a
+    # <=256-member wave spreads over ~977 shards and essentially never
+    # crosses the promote threshold, so the row path serves everything —
+    # prefetch overlaps those row-block materializations (and any shard
+    # loads) with device compute.
+    "pop-1m": PopulationPreset(1_000_000, shard_size=1024, shard_cache=4,
+                               prefetch=True),
     # CI smoke: tiny C but FORCED multi-shard chunked path (8 shards,
     # 2-resident LRU, promote=1 so shards actually cache and evict)
     "pop-smoke": PopulationPreset(240, shard_size=32, shard_cache=2,
                                   shard_promote=1, n_inflight=48,
                                   size_mean=24, size_lo=8, size_hi=40),
+    # CI smoke in the pop-1m shape: prefetch on over a fragmented
+    # multi-shard cache (16 shards, 2-resident LRU) whose promote=4
+    # threshold both caches shards (eviction-crossing) and leaves a
+    # row-path residue, so every prefetch path — shard futures, row
+    # blocks, stale-key fallback — runs in tier-1
+    "pop-1m-smoke": PopulationPreset(2_000, shard_size=128, shard_cache=2,
+                                     shard_promote=4, n_inflight=128,
+                                     size_mean=24, size_lo=8, size_hi=40,
+                                     prefetch=True),
 }
 
 

@@ -175,6 +175,15 @@ class ClientSlabStore:
     function of client id), so evictions can never change results — only
     which path serves a member. ``stats`` counts both paths for the tests
     and the population benchmark.
+
+    ``prefetch(cids)`` overlaps the NEXT wave's host materialization +
+    H2D upload with the current wave's device compute: a single background
+    worker runs the same ``member_rows``/``jnp.asarray`` pipeline and the
+    results are integrated into the same LRU (shards) or handed to the next
+    gather (the row-path block) on the main thread — the worker never
+    mutates the cache or the counters, so no locking is needed and the
+    serving semantics (and therefore results, rows being pure in cid) are
+    byte-identical with prefetch on or off.
     """
 
     def __init__(self, source, *, shard_size: int, cache_shards: int = 32,
@@ -192,6 +201,14 @@ class ClientSlabStore:
         self.row_fetches = 0     # members served via the row path
         self.shard_loads = 0     # full-shard materializations
         self.evictions = 0
+        # -- async prefetch (single worker; results land on the main thread)
+        self._pool = None                  # lazy ThreadPoolExecutor
+        self._pending: dict = {}           # sid -> Future[(x_dev, y_dev)]
+        self._pending_rows = None          # (cid-tuple, Future) row block
+        self._prefetched_fresh: set = set()   # installed, not yet served
+        self.prefetch_issued = 0   # members covered by issued prefetches
+        self.prefetch_hits = 0     # members served from prefetched data
+        self.prefetch_wasted = 0   # prefetched row-blocks never consumed
 
     @classmethod
     def build(cls, client_datasets, *, shard_size: int = 0,
@@ -220,22 +237,111 @@ class ClientSlabStore:
 
     @property
     def stats(self) -> dict:
+        served = self.hits + self.row_fetches
         return {"hits": self.hits, "row_fetches": self.row_fetches,
                 "shard_loads": self.shard_loads, "evictions": self.evictions,
-                "resident_shards": len(self._cache)}
+                "resident_shards": len(self._cache),
+                "prefetch_issued": self.prefetch_issued,
+                "prefetch_hits": self.prefetch_hits,
+                "prefetch_wasted": self.prefetch_wasted,
+                "hit_rate": self.hits / served if served else 0.0,
+                "row_fetch_rate": (self.row_fetches / served
+                                   if served else 0.0)}
 
-    def _load_shard(self, sid: int):
+    # -- materialization (pure; safe on the worker thread) ------------------
+
+    def _materialize_shard(self, sid: int):
         import jax.numpy as jnp
         lo = sid * self.shard_size
         hi = min(lo + self.shard_size, self.num_clients)
         x, y = self.source.member_rows(np.arange(lo, hi))
-        entry = (jnp.asarray(x), jnp.asarray(y))
+        return jnp.asarray(x), jnp.asarray(y)
+
+    def _materialize_rows(self, cids: np.ndarray):
+        import jax.numpy as jnp
+        x, y = self.source.member_rows(cids)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    # -- cache integration (main thread only) -------------------------------
+
+    def _install_shard(self, sid: int, entry) -> None:
         self._cache[sid] = entry
         self.shard_loads += 1
         while len(self._cache) > self.cache_shards:
-            self._cache.popitem(last=False)
+            evicted, _ = self._cache.popitem(last=False)
+            if evicted in self._prefetched_fresh:
+                self._prefetched_fresh.discard(evicted)
+                self.prefetch_wasted += 1
             self.evictions += 1
+
+    def _load_shard(self, sid: int):
+        entry = self._materialize_shard(sid)
+        self._install_shard(sid, entry)
         return entry
+
+    @staticmethod
+    def _plan(cids: np.ndarray, shard_size: int):
+        """Vectorized shard bucketing: yields ``(sid, positions)`` groups in
+        ascending shard order, positions in input order within each group
+        (replaces the per-member Python loop — O(B log B) in numpy)."""
+        sids = (cids // shard_size).astype(np.int64)
+        order = np.argsort(sids, kind="stable")
+        uniq, starts = np.unique(sids[order], return_index=True)
+        bounds = np.append(starts, cids.shape[0])
+        return [(int(uniq[i]), order[bounds[i]:bounds[i + 1]])
+                for i in range(uniq.shape[0])]
+
+    def _ensure_pool(self):
+        if self._pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="slab-prefetch")
+        return self._pool
+
+    def prefetch(self, cids) -> None:
+        """Hint that the next ``gather`` will want these members: schedule
+        the shards the promote rule would load (not yet resident, not
+        already in flight) and the residual row-path block on the worker.
+        A hint can only move work off the gather path — a wrong or stale
+        prediction degrades to the synchronous behavior (the mismatched
+        row block is dropped and counted in ``prefetch_wasted``)."""
+        cids = np.asarray(cids, np.int64)
+        if cids.size == 0:
+            return
+        pool = self._ensure_pool()
+        miss = []
+        for sid, poss in self._plan(cids, self.shard_size):
+            if sid in self._cache:
+                continue
+            if len(poss) >= self.promote:
+                if sid not in self._pending:
+                    self._pending[sid] = pool.submit(
+                        self._materialize_shard, sid)
+                    self.prefetch_issued += len(poss)
+            else:
+                miss.extend(poss.tolist())
+        if miss:
+            row_cids = cids[miss]
+            key = tuple(int(c) for c in row_cids)
+            if self._pending_rows is not None:
+                if self._pending_rows[0] == key:
+                    return
+                self.prefetch_wasted += 1
+            self._pending_rows = (key, pool.submit(
+                self._materialize_rows, row_cids))
+            self.prefetch_issued += len(miss)
+
+    def _drain_prefetch(self) -> None:
+        """Integrate completed shard prefetches into the LRU (main thread:
+        the worker never touches ``_cache``)."""
+        if not self._pending:
+            return
+        done = [sid for sid, f in self._pending.items() if f.done()]
+        for sid in done:
+            f = self._pending.pop(sid)
+            if sid not in self._cache:
+                self._install_shard(sid, f.result())
+                self._prefetched_fresh.add(sid)
 
     def gather(self, cids):
         """Members' rows as device ``(B, n_max, ...)`` arrays, one gather
@@ -244,12 +350,17 @@ class ClientSlabStore:
         import jax.numpy as jnp
         cids = np.asarray(cids, np.int64)
         B = cids.shape[0]
-        by_shard: dict = {}
-        for pos, c in enumerate(cids):
-            by_shard.setdefault(int(c) // self.shard_size, []).append(pos)
+        self._drain_prefetch()
         parts_x, parts_y, positions, miss = [], [], [], []
-        for sid, poss in by_shard.items():
+        for sid, poss in self._plan(cids, self.shard_size):
+            poss = poss.tolist()
             entry = self._cache.get(sid)
+            if entry is None and sid in self._pending:
+                # in-flight prefetch for a shard this wave needs: wait for
+                # the worker instead of re-materializing
+                entry = self._pending.pop(sid).result()
+                self._install_shard(sid, entry)
+                self._prefetched_fresh.add(sid)
             if entry is None and len(poss) >= self.promote:
                 entry = self._load_shard(sid)
             if entry is None:
@@ -257,6 +368,9 @@ class ClientSlabStore:
                 self.row_fetches += len(poss)
                 continue
             self._cache.move_to_end(sid)
+            if sid in self._prefetched_fresh:
+                self._prefetched_fresh.discard(sid)
+                self.prefetch_hits += len(poss)
             self.hits += len(poss)
             rows = cids[poss] - sid * self.shard_size
             rows_j = jnp.asarray(rows.astype(np.int32))
@@ -264,9 +378,16 @@ class ClientSlabStore:
             parts_y.append(entry[1][rows_j])
             positions.extend(poss)
         if miss:
-            x_h, y_h = self.source.member_rows(cids[miss])
-            parts_x.append(jnp.asarray(x_h))
-            parts_y.append(jnp.asarray(y_h))
+            pr, self._pending_rows = self._pending_rows, None
+            if pr is not None and pr[0] == tuple(int(c) for c in cids[miss]):
+                x_h, y_h = pr[1].result()
+                self.prefetch_hits += len(miss)
+            else:
+                if pr is not None:
+                    self.prefetch_wasted += 1
+                x_h, y_h = self._materialize_rows(cids[miss])
+            parts_x.append(x_h)
+            parts_y.append(y_h)
             positions.extend(miss)
         x = parts_x[0] if len(parts_x) == 1 else jnp.concatenate(parts_x)
         y = parts_y[0] if len(parts_y) == 1 else jnp.concatenate(parts_y)
@@ -280,7 +401,18 @@ class ClientSlabStore:
 
 def batch_iterator(ds: SyntheticClassification, batch_size: int,
                    seed: int = 0) -> Iterator[dict]:
-    """Endless shuffled batches (evaluation/training streams)."""
+    """Endless shuffled batches (evaluation/training streams).
+
+    Contract (pinned by ``tests/test_data.py``): every yielded batch has
+    exactly ``batch_size`` rows — the tail partial batch of each epoch is
+    SILENTLY DROPPED, so one epoch yields ``n // batch_size`` batches and
+    the last ``n % batch_size`` rows of each permutation are skipped (a
+    different subset every epoch, so no row is starved across epochs).
+    Corollary: ``batch_size > n`` yields nothing and an unguarded ``next``
+    would spin forever — callers must size batches within the dataset.
+    Changing either behavior (e.g. emitting the ragged tail) must be a
+    deliberate contract change, not a drive-by fix.
+    """
     rng = np.random.RandomState(seed)
     n = len(ds)
     while True:

@@ -38,8 +38,12 @@ surface):
     (participation freshness), larger (utility), and likely to arrive
     (availability state from ``latency.per_client_availability``).
     Selection is sequential per dispatch (each draw updates the lag
-    table), O(num_clients) per dispatch — a research scheduler for
-    paper-scale C, not the population-scale path.
+    table). The default sampler is SUBLINEAR in C per draw (rejection
+    sampling against the static base-utility cumsum — see the class
+    docstring), which is what makes staleness-aware selection usable on
+    the population-scale streaming path at C=10^5-10^6;
+    ``scheduler_params={"exact": True}`` keeps the historical O(C)
+    full-recompute loop as the exact-distribution oracle.
 
 RNG-stream contract (see ``latency._subseed``): a scheduler may draw ONLY
 from the dispatch stream handed to ``bind`` — the bare
@@ -125,12 +129,19 @@ class Scheduler:
     and ``select`` draws one client per launch (the only RNG consumer).
 
     ``stateless=True`` promises the scheduler's only mutable state is the
-    bound RNG — what simulator checkpointing can already persist. Stateful
-    schedulers are rejected for checkpointed runs.
+    bound RNG — what simulator checkpointing can already persist. A
+    stateful scheduler (``stateless=False``) is checkpointable only when it
+    additionally sets ``checkpoint_state=True`` and implements the
+    ``state_arrays``/``load_state_arrays`` round-trip (the staleness
+    scheduler's lag table does); stateful schedulers without it are
+    rejected for checkpointed runs up front.
     """
 
     name = "scheduler"
     stateless = True
+    # stateful schedulers opt in to checkpointing by setting this True and
+    # implementing the state_arrays/load_state_arrays round-trip
+    checkpoint_state = False
 
     def bind(self, *, num_clients: int, rng: np.random.RandomState,
              latency_means=None, avail_probs=None, data_sizes=None) -> None:
@@ -148,6 +159,18 @@ class Scheduler:
         """(n,) client ids for launches at ``ts`` with the given
         version-at-dispatch per slot. The ONLY method that may draw RNG."""
         raise NotImplementedError
+
+    def state_arrays(self) -> dict:
+        """The scheduler's incremental host state as name -> numpy array,
+        persisted by simulator checkpoints when ``checkpoint_state``.
+        Stateless schedulers have nothing to persist."""
+        return {}
+
+    def load_state_arrays(self, arrays: dict) -> None:
+        """Restore ``state_arrays`` output into a bound scheduler."""
+        if arrays:
+            raise NotImplementedError(
+                f"scheduler {self.name!r} does not restore state")
 
 
 class UniformRefillScheduler(Scheduler):
@@ -191,18 +214,49 @@ class StalenessAwareScheduler(Scheduler):
     server version at last dispatch; each draw updates it, so selection is
     a sequential per-dispatch loop — identical RNG consumption whether
     called with a batch or one slot at a time (the cohort flush and the
-    sequential oracle stay stream-identical)."""
+    sequential oracle stay stream-identical).
+
+    Two samplers draw from the SAME distribution:
+
+    ``exact=True`` — the historical oracle: rebuild the full C-length
+    weight vector and ``rng.choice(p=...)`` per draw, O(C). Fine at paper
+    scale, a hot-path blocker on the streaming path at C=10^5-10^6.
+
+    ``exact=False`` (default) — sublinear rejection sampling. The weight
+    factors as ``base_c * (1 + lag_c)^w`` where ``base_c`` (size x
+    availability) is STATIC after ``bind`` and ``lag_c = v - lv_c`` with
+    ``lv_c`` the version at c's last dispatch. Proposals come from the
+    static base cumsum (one ``searchsorted``, O(log C)); since versions
+    only advance, ``lv_floor <= min_c lv_c`` gives the envelope
+    ``base_c * (1 + v - lv_floor)^w >= weight_c``, so accepting a proposal
+    with probability ``((1 + lag_c) / (1 + v - lv_floor))^w`` is EXACT.
+    Per draw: O(log C) expected — untouched clients (the overwhelming mass
+    at population scale) accept at rate ~1, only the O(launched) touched
+    clients reject. Pathological states (every client recently dispatched,
+    stale floor) self-heal: after ``_REJECT_REFRESH`` rejections the floor
+    is recomputed (amortized — only then is an O(C) ``min`` paid), and
+    after ``_REJECT_EXACT`` rejections the draw falls back to one exact
+    O(C) recompute, still the exact distribution. The fast and exact
+    samplers consume the dispatch stream differently (both are valid
+    consumptions under the RNG contract); batch == scalar holds for each.
+    """
 
     name = "staleness"
-    stateless = False       # the lag table is not checkpointable state
+    stateless = False       # lag table — checkpointed via state_arrays
+    checkpoint_state = True
+
+    _REJECT_REFRESH = 16    # rejections before recomputing the lag floor
+    _REJECT_EXACT = 64      # rejections before one exact O(C) fallback
 
     def __init__(self, staleness_weight: float = 1.0,
-                 size_weight: float = 1.0, avail_weight: float = 1.0):
+                 size_weight: float = 1.0, avail_weight: float = 1.0,
+                 exact: bool = False):
         if staleness_weight < 0.0:
             raise ValueError("staleness_weight must be >= 0")
         self.staleness_weight = float(staleness_weight)
         self.size_weight = float(size_weight)
         self.avail_weight = float(avail_weight)
+        self.exact = bool(exact)
 
     def bind(self, **kw):
         super().bind(**kw)
@@ -218,14 +272,72 @@ class StalenessAwareScheduler(Scheduler):
                 np.clip(np.asarray(self.avail_probs, np.float64), 1e-6, 1.0),
                 self.avail_weight)
         self._base = base
+        # fast-path proposal structure: cumsum over the STATIC base utility
+        # (never updated — lag lives outside it, in last_version)
+        self._cum = np.cumsum(base)
+        self._total = float(self._cum[-1])
+        self._lv_floor = 0.0
+        self.sample_stats = {"draws": 0, "proposals": 0,
+                             "floor_refreshes": 0, "exact_fallbacks": 0}
+
+    # -- checkpoint round-trip ----------------------------------------------
+
+    def state_arrays(self) -> dict:
+        return {"last_version": np.asarray(self.last_version, np.float64),
+                "lv_floor": np.asarray([self._lv_floor], np.float64)}
+
+    def load_state_arrays(self, arrays: dict) -> None:
+        self.last_version[:] = np.asarray(arrays["last_version"], np.float64)
+        self._lv_floor = float(np.asarray(arrays["lv_floor"]).ravel()[0])
+
+    # -- samplers ------------------------------------------------------------
+
+    def _exact_draw(self, v: float) -> int:
+        lag = np.maximum(v - self.last_version, 0.0)
+        w = self._base * np.power(1.0 + lag, self.staleness_weight)
+        return int(self.rng.choice(self.num_clients, p=w / w.sum()))
+
+    def _refresh_floor(self) -> None:
+        self.sample_stats["floor_refreshes"] += 1
+        self._lv_floor = float(self.last_version.min())
+
+    def _fast_draw(self, v: float) -> int:
+        sw = self.staleness_weight
+        st = self.sample_stats
+        st["draws"] += 1
+        env = (1.0 + max(v - self._lv_floor, 0.0)) ** sw
+        rejects = 0
+        while True:
+            st["proposals"] += 1
+            u = self.rng.random_sample() * self._total
+            c = min(int(np.searchsorted(self._cum, u, side="right")),
+                    self.num_clients - 1)
+            a = self.rng.random_sample()
+            lag = max(v - self.last_version[c], 0.0)
+            p = (1.0 + lag) ** sw / env
+            if p > 1.0:
+                # the floor drifted above the true min (state was mutated
+                # externally): re-derive it so the envelope dominates again,
+                # then re-test the SAME proposal under the valid envelope
+                self._refresh_floor()
+                env = (1.0 + max(v - self._lv_floor, 0.0)) ** sw
+                p = (1.0 + lag) ** sw / env
+            if a < p:
+                return c
+            rejects += 1
+            if rejects == self._REJECT_REFRESH:
+                self._refresh_floor()
+                env = (1.0 + max(v - self._lv_floor, 0.0)) ** sw
+            elif rejects >= self._REJECT_EXACT:
+                st["exact_fallbacks"] += 1
+                return self._exact_draw(v)
 
     def select(self, ts, versions):
         versions = np.asarray(versions, np.float64)
+        draw = self._exact_draw if self.exact else self._fast_draw
         out = np.empty(len(ts), np.int64)
         for i in range(len(ts)):
-            lag = np.maximum(versions[i] - self.last_version, 0.0)
-            w = self._base * np.power(1.0 + lag, self.staleness_weight)
-            c = int(self.rng.choice(self.num_clients, p=w / w.sum()))
+            c = draw(versions[i])
             self.last_version[c] = versions[i]
             out[i] = c
         return out

@@ -150,6 +150,14 @@ class SimConfig:
     shard_cache: int = 32              # max resident shards (LRU)
     shard_promote: int = 8             # cache a shard once a wave wants
                                        # >= this many of its clients
+    # Async shard prefetch (streaming engine only): right after a wave's
+    # replacement dispatches are inserted, peek the NEXT wave's member set
+    # off the timeline (Timeline.peek_wave_cids) and overlap its host
+    # materialization + H2D upload with the current device work on the
+    # store's single background worker. Pure hint: rows are a pure function
+    # of cid, so results are bit-identical with prefetch on or off (see
+    # ARCHITECTURE.md "dispatch pipeline contract").
+    prefetch: bool = False
     # Layout: with a mesh, the policy server shards ServerState over the
     # mesh's flat-parameter axis (servers.ShardedPolicyServer) and the
     # cohort engine trains waves data-parallel over the client axis; rules
@@ -448,8 +456,16 @@ def _event_snapshot_vec(ev: "_Event", spec: tu.FlatSpec) -> np.ndarray:
     return np.asarray(spec.flatten(s))
 
 
+def _ckpt_state_sched(scheduler) -> bool:
+    """Whether snapshots for this run carry a scheduler-state subtree.
+    Stateless schedulers contribute nothing (their tree layout — and thus
+    old snapshots — stays unchanged); stateful ones must have opted in via
+    ``checkpoint_state`` (run_async rejects the rest up front)."""
+    return not scheduler.stateless and scheduler.checkpoint_state
+
+
 def _ckpt_save(sim: "SimConfig", server, rng, latency, avail_rng, timeline,
-               result: "SimResult", t: float, next_eval: float,
+               scheduler, result: "SimResult", t: float, next_eval: float,
                seq: int) -> str:
     from repro.checkpoint import store
     spec = server.policy.spec
@@ -483,14 +499,19 @@ def _ckpt_save(sim: "SimConfig", server, rng, latency, avail_rng, timeline,
                                  np.int64),
         },
     }
+    if _ckpt_state_sched(scheduler):
+        tree["scheduler"] = scheduler.state_arrays()
     return store.save_pytree(tree, sim.checkpoint_dir, step=result.dispatches)
 
 
-def _ckpt_like(server) -> dict:
+def _ckpt_like(server, scheduler) -> dict:
     """A structure template for ``store.load_pytree`` (shapes are ignored by
     the restore — only the tree structure and leaf names must match)."""
     z = np.zeros((0,))
+    sched_tree = ({"scheduler": {k: z for k in scheduler.state_arrays()}}
+                  if _ckpt_state_sched(scheduler) else {})
     return {
+        **sched_tree,
         "server": {f"{i:04d}": z for i in
                    range(len(jax.tree_util.tree_leaves(server.state)))},
         "events": {k: z for k in ("t_done", "seq", "cid", "version", "ok",
@@ -504,7 +525,7 @@ def _ckpt_like(server) -> dict:
 
 
 def _ckpt_restore(sim: "SimConfig", server, rng, latency, avail_rng,
-                  timeline, result: "SimResult", batched: bool):
+                  timeline, scheduler, result: "SimResult", batched: bool):
     """Restore the latest snapshot under ``sim.checkpoint_dir`` into the
     live run, returning ``(t, next_eval, seq)`` — or None when there is no
     snapshot to resume from (the run then starts fresh)."""
@@ -512,7 +533,10 @@ def _ckpt_restore(sim: "SimConfig", server, rng, latency, avail_rng,
     step = store.latest_step(sim.checkpoint_dir)
     if step is None:
         return None
-    tree = store.load_pytree(sim.checkpoint_dir, _ckpt_like(server), step)
+    tree = store.load_pytree(sim.checkpoint_dir,
+                             _ckpt_like(server, scheduler), step)
+    if _ckpt_state_sched(scheduler):
+        scheduler.load_state_arrays(tree["scheduler"])
     treedef = jax.tree_util.tree_structure(server.state)
     leaves = [jnp.asarray(tree["server"][f"{i:04d}"])
               for i in range(treedef.num_leaves)]
@@ -670,11 +694,13 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
     # sub-streams (see latency._subseed / scheduler.make_streams).
     streams = make_streams(sim)
     scheduler = make_scheduler(sim)
-    if sim.checkpoint_dir and not scheduler.stateless:
+    if sim.checkpoint_dir and not (scheduler.stateless
+                                   or scheduler.checkpoint_state):
         raise ValueError(
             f"scheduler {scheduler.name!r} keeps host-side state beyond its "
-            f"RNG and cannot be checkpointed; drop checkpoint_dir or use a "
-            f"stateless scheduler")
+            f"RNG and does not implement the state_arrays checkpoint "
+            f"round-trip; drop checkpoint_dir or use a checkpointable "
+            f"scheduler")
     sketch_fn = None
     if server_name == "fedpsa":
         psa_cfg = psa_cfg or psa_lib.PSAConfig()
@@ -700,7 +726,8 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
     resumed = None
     if sim.checkpoint_dir and sim.resume:
         resumed = _ckpt_restore(sim, server, streams.rng, streams.latency,
-                                streams.avail_rng, timeline, result, batched)
+                                streams.avail_rng, timeline, scheduler,
+                                result, batched)
     if resumed is None:
         dispatcher.dispatch_many(np.zeros(concurrency))
     else:
@@ -715,8 +742,8 @@ def run_async(server_name: str, cfg: ModelConfig, init_params,
             if t_ < nxt[0]:
                 return
             _ckpt_save(sim, server, streams.rng, streams.latency,
-                       streams.avail_rng, timeline_, result, t_, next_eval_,
-                       dispatcher.seq)
+                       streams.avail_rng, timeline_, scheduler, result, t_,
+                       next_eval_, dispatcher.seq)
             while nxt[0] <= t_:
                 nxt[0] += sim.checkpoint_every
 
@@ -806,6 +833,10 @@ def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
     spec = server.policy.spec
     engine = _make_cohort_engine(cfg, client_datasets, spec, init_params,
                                  sim, align=align)
+    # prefetch only has a target on the streaming engine (the monolithic
+    # slab is fully device-resident already)
+    prefetch_store = (getattr(engine, "store", None) if sim.prefetch
+                      else None)
     sketch_flat = None
     if server.needs_sketch:
         sketch_flat = make_sketch_fn_flat(cfg, calib_batch, psa_cfg, spec)
@@ -920,6 +951,14 @@ def _drain_cohort(server, cfg, init_params, client_datasets, sim: SimConfig,
             if receive_hook is not None:
                 flush()
         flush()
+        # the wave's replacements are inserted: the NEXT wave's member set
+        # is determined, so overlap its materialization + upload with the
+        # still-retiring device work (device dispatch is async)
+        if prefetch_store is not None and t_over is None and t < sim.horizon:
+            nxt = timeline.peek_wave_cids(sim.latency_lo, sim.max_cohort,
+                                          sim.horizon)
+            if nxt.size:
+                prefetch_store.prefetch(nxt)
         if t_over is not None:
             t = t_over
             break
@@ -1109,6 +1148,8 @@ def _drain_sweep(server, cfg, params_lanes, client_datasets, sim: SimConfig,
     spec = server.policy.spec
     engine = _make_cohort_engine(cfg, client_datasets, spec, params_lanes[0],
                                  sim, align=align)
+    prefetch_store = (getattr(engine, "store", None) if sim.prefetch
+                      else None)
     sketch_lanes = None
     if server.needs_sketch:
         sketch_lanes = make_sketch_fn_lanes(cfg, calib_batch, psa_cfg, spec)
@@ -1204,6 +1245,11 @@ def _drain_sweep(server, cfg, params_lanes, client_datasets, sim: SimConfig,
                     next_eval += sim.eval_every
             pending.append(ev)
         flush()
+        if prefetch_store is not None and t_over is None and t < sim.horizon:
+            nxt = timeline.peek_wave_cids(sim.latency_lo, sim.max_cohort,
+                                          sim.horizon)
+            if nxt.size:
+                prefetch_store.prefetch(nxt)
         if t_over is not None:
             t = t_over
             break

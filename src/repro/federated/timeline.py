@@ -110,6 +110,38 @@ class Timeline:
         self._n -= 1
         return ev
 
+    def peek_wave_cids(self, latency_lo: float, max_cohort: int,
+                       horizon: float) -> np.ndarray:
+        """Client ids of the OK events the NEXT wave would train, without
+        consuming anything — a non-destructive replica of the cohort
+        drain's wave rule (maximal prefix with ``t_done < t_first +
+        latency_lo``, capped at ``max_cohort``, truncated at the horizon).
+        This is what makes shard prefetch possible: the moment a wave's
+        replacement dispatches are inserted, the next wave's member set is
+        already determined. Walks a shallow copy of the run-cursor heap —
+        O(wave * log runs), no event is popped and no run is mutated."""
+        heap = list(self._heap)      # cursor tuples are immutable; runs
+        if not heap:                 # are shared read-only
+            return np.empty(0, np.int64)
+        t, _s, run, i = heapq.heappop(heap)
+        if t > horizon:
+            return np.empty(0, np.int64)
+        bound = t + latency_lo
+        out, count = [], 0
+        while True:
+            if run.ok[i]:
+                out.append(int(run.cid[i]))
+            count += 1
+            j = i + 1
+            if j < run.seq.shape[0]:
+                heapq.heappush(heap, (run.t[j], run.seq[j], run, j))
+            if not heap or count >= max_cohort:
+                break
+            t, _s, run, i = heapq.heappop(heap)
+            if t >= bound or t > horizon:
+                break
+        return np.asarray(out, np.int64)
+
     def events(self) -> List[_Event]:
         """All in-flight events in ``(t_done, seq)`` order (checkpointing)."""
         out = []

@@ -79,6 +79,24 @@ def test_small_client_batch_clamps():
     assert len(batches) == 2 and batches[0]["x"].shape[0] == 10
 
 
+def test_batch_iterator_drops_tail_batch():
+    """The documented batch_iterator contract: every batch is exactly
+    ``batch_size`` rows and the ragged tail of each epoch's permutation is
+    silently dropped — ``n // batch_size`` batches per epoch, pinned here
+    so a future tail-emitting fix is a deliberate contract change."""
+    ds = make_classification(130, 5, 8, seed=12)
+    it = batch_iterator(ds, batch_size=64, seed=0)
+    # 3 epochs' worth: floor(130/64) = 2 full batches per epoch, never a
+    # 2-row tail batch
+    batches = [next(it) for _ in range(6)]
+    assert all(b["x"].shape == (64, 8) for b in batches)
+    # epoch boundary check: batches 0-1 and 2-3 come from different
+    # permutations of the same rows (row multiset differs by the dropped
+    # 2-row tails), and no row repeats within one epoch
+    e0 = np.concatenate([batches[0]["x"], batches[1]["x"]])
+    assert len(np.unique(e0, axis=0)) == 128
+
+
 def test_lm_corpus_learnable_structure():
     toks = make_lm_corpus(5000, vocab=64, seed=0, branching=4)
     assert toks.min() >= 0 and toks.max() < 64

@@ -124,6 +124,111 @@ def test_staleness_batch_equals_scalar_stream():
     np.testing.assert_array_equal(batched, scalar)
 
 
+def test_staleness_exact_flag_replays_historical_loop():
+    """``scheduler_params={"exact": True}`` is the pre-PR-10 oracle: the
+    full C-length weight recompute + ``rng.choice(p=...)`` per slot. Replay
+    that rule on a twin RNG and require bit-identical draws."""
+    C, seed, sw = 12, 5, 2.0
+    sched = _bound(StalenessAwareScheduler(staleness_weight=sw, exact=True),
+                   num_clients=C, seed=seed)
+    twin = np.random.RandomState(seed)
+    last = np.zeros(C)
+    versions = np.array([1, 3, 3, 8, 9, 15], np.int64)
+    got = sched.select(np.arange(6.0), versions)
+    for i, v in enumerate(versions):
+        w = np.power(1.0 + np.maximum(v - last, 0.0), sw)
+        c = int(twin.choice(C, p=w / w.sum()))
+        last[c] = v
+        assert int(got[i]) == c
+
+
+def _staleness_pmf(sched, v):
+    lag = np.maximum(v - sched.last_version, 0.0)
+    w = sched._base * np.power(1.0 + lag, sched.staleness_weight)
+    return w / w.sum()
+
+
+@pytest.mark.parametrize("sw,lags", [
+    (1.0, "none"), (2.0, "mixed"), (0.5, "one_hot"), (3.0, "mixed"),
+])
+def test_staleness_fast_sampler_matches_exact_distribution(sw, lags):
+    """The rejection sampler draws from EXACTLY the oracle's distribution.
+    Freeze a lag table, take many single draws (re-arming the table after
+    each so they are i.i.d.), and chi-square the empirical counts against
+    the analytic pmf the exact loop normalizes."""
+    from scipy import stats
+
+    C, N = 8, 4000
+    table = {"none": np.zeros(C),
+             "mixed": np.array([0., 5., 1., 9., 0., 3., 7., 2.]),
+             "one_hot": np.array([4.] * 7 + [0.])}[lags]
+    sched = _bound(StalenessAwareScheduler(staleness_weight=sw),
+                   num_clients=C, seed=int(sw * 10))
+    v = 10.0
+    sched.last_version[:] = v - table          # lag == table at version v
+    pmf = _staleness_pmf(sched, v)
+    counts = np.zeros(C)
+    for _ in range(N):
+        c = int(sched.select(np.array([0.0]), np.array([v]))[0])
+        counts[c] += 1
+        sched.last_version[:] = v - table      # re-arm: draws stay i.i.d.
+        sched._lv_floor = 0.0
+    assert stats.chisquare(counts, pmf * N).pvalue > 1e-3, (counts, pmf * N)
+    # the sampler really took the sublinear path: rejection proposals, with
+    # the exact O(C) fallback never (or almost never) engaged
+    st = sched.sample_stats
+    assert st["draws"] == N
+    assert st["exact_fallbacks"] <= N // 100
+
+
+def test_staleness_fast_sampler_trajectory_stats():
+    """On a realistic sequential trajectory (versions advancing, lag table
+    self-mutating) the fast path stays cheap: bounded proposals per draw
+    and no drift into the exact fallback."""
+    C = 512
+    sched = _bound(StalenessAwareScheduler(staleness_weight=1.5),
+                   num_clients=C, seed=0)
+    v = 0.0
+    for i in range(400):
+        v += 1.0
+        sched.select(np.array([float(i)]), np.array([v]))
+    st = sched.sample_stats
+    assert st["draws"] == 400
+    assert st["proposals"] / st["draws"] < 8.0, st
+    assert st["exact_fallbacks"] == 0, st
+
+
+@pytest.mark.slow
+def test_staleness_population_scale_per_draw_budget():
+    """C=100k staleness-aware selection must be usable on the streaming
+    path: the fast sampler's per-draw cost stays within a hard budget and
+    beats the exact O(C) oracle by a wide margin."""
+    import time
+
+    C, warm, timed = 100_000, 16, 256
+    fast = _bound(StalenessAwareScheduler(), num_clients=C, seed=1)
+    v = 0.0
+    for i in range(warm):
+        v += 1.0
+        fast.select(np.array([float(i)]), np.array([v]))
+    t0 = time.perf_counter()
+    for i in range(timed):
+        v += 1.0
+        fast.select(np.array([float(i)]), np.array([v]))
+    per_draw_fast = (time.perf_counter() - t0) / timed
+
+    exact = _bound(StalenessAwareScheduler(exact=True), num_clients=C,
+                   seed=1)
+    t0 = time.perf_counter()
+    for i in range(8):
+        exact.select(np.array([float(i)]), np.array([float(i + 1)]))
+    per_draw_exact = (time.perf_counter() - t0) / 8
+
+    assert per_draw_fast < 200e-6, per_draw_fast     # < 200 us/draw
+    assert per_draw_exact / per_draw_fast > 10.0, (per_draw_exact,
+                                                   per_draw_fast)
+
+
 def test_staleness_uses_size_and_availability_state():
     """size/avail weights shape the base preference: with no lag signal the
     larger, more-available client dominates."""
@@ -205,26 +310,81 @@ def test_bench_writers_surface_nan_aulc():
     assert bench_common.aulc_json(0.37) == pytest.approx(0.37)
 
 
-def test_checkpoint_rejects_stateful_scheduler(tmp_path):
-    """The staleness scheduler's lag table lives outside the checkpoint
-    format; run_async must refuse up front rather than resume wrongly."""
+def _paper_world(num_clients=4):
     import jax
     from repro.configs import get_config
     from repro.data import (ClientDataset, iid_partition,
                             make_classification, train_test_split)
-    from repro.federated import run_algorithm
     from repro.models import model as M
 
     cfg = get_config("paper-synthetic-mlp")
     full = make_classification(200, 10, 32, seed=0)
     train, test = train_test_split(full, 0.2)
     clients = [ClientDataset(train.subset(ix))
-               for ix in iid_partition(train, 4, 0)]
+               for ix in iid_partition(train, num_clients, 0)]
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    sim = SimConfig(num_clients=4, horizon=100.0, scheduler="staleness",
+    return cfg, clients, test, params
+
+
+def test_checkpoint_rejects_stateful_scheduler_without_roundtrip(
+        tmp_path, monkeypatch):
+    """A stateful scheduler that does NOT implement the state_arrays
+    round-trip (checkpoint_state=False) must be refused up front rather
+    than resumed wrongly with a reset lag table."""
+    from repro.federated import run_algorithm
+    from repro.federated import simulator as sim_mod
+
+    class Opaque(StalenessAwareScheduler):
+        name = "opaque"
+        checkpoint_state = False
+
+    cfg, clients, test, params = _paper_world()
+    orig = sim_mod.make_scheduler
+    monkeypatch.setattr(
+        sim_mod, "make_scheduler",
+        lambda sim: Opaque() if sim.scheduler == "opaque" else orig(sim))
+    sim = SimConfig(num_clients=4, horizon=100.0, scheduler="opaque",
                     checkpoint_dir=str(tmp_path), engine="sequential")
-    with pytest.raises(ValueError, match="cannot be checkpointed"):
+    with pytest.raises(ValueError, match="state_arrays"):
         run_algorithm("fedasync", cfg, params, clients, test, sim)
+
+
+@pytest.mark.parametrize("exact", [False, True])
+def test_staleness_checkpoint_resume_roundtrip(tmp_path, exact):
+    """The staleness scheduler's lag table (+ envelope floor) round-trips
+    through simulator checkpoints: a run resumed mid-stream from a pruned
+    snapshot reproduces the uninterrupted digest stream exactly, under
+    both the fast sampler and the exact oracle."""
+    import os
+    import shutil
+
+    from repro.federated import run_algorithm
+
+    cfg, clients, test, params = _paper_world()
+    kw = dict(num_clients=4, horizon=2_000.0, eval_every=1_000.0, seed=0,
+              scheduler="staleness",
+              scheduler_params={"staleness_weight": 2.0, "exact": exact},
+              record_trajectory=True, engine="sequential")
+    base = run_algorithm("fedasync", cfg, params, clients, test,
+                         SimConfig(**kw))
+    ckdir = str(tmp_path / "ck")
+    ck = run_algorithm("fedasync", cfg, params, clients, test,
+                       SimConfig(checkpoint_dir=ckdir, checkpoint_every=500.0,
+                                 **kw))
+    np.testing.assert_array_equal(np.asarray(ck.digests),
+                                  np.asarray(base.digests))
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckdir))
+    mid = [s for s in steps if 0 < s < base.dispatches]
+    assert mid, steps
+    for s in steps:
+        if s > mid[-1]:
+            shutil.rmtree(os.path.join(ckdir, f"step_{s:08d}"))
+    res = run_algorithm("fedasync", cfg, params, clients, test,
+                        SimConfig(checkpoint_dir=ckdir,
+                                  checkpoint_every=500.0, resume=True, **kw))
+    np.testing.assert_array_equal(np.asarray(res.digests),
+                                  np.asarray(base.digests))
+    assert res.dispatches == base.dispatches
 
 
 def test_fedavg_round_sampling_has_own_stream():
